@@ -1,0 +1,96 @@
+"""Shared harness: the paper's 4-asset Common-Crawl pipeline wired into the
+orchestrator, with Table-1-calibrated compute profiles.
+
+Calibration (DESIGN.md §7): spot == EMR, premium == DBR.
+Rates: spot $0.145/chip-h + 26% surcharge; premium 2.4x base + 48% surcharge;
+work back-solved from Table 1 base costs (edges 2200 chip-h, graph 26,
+nodes 2.3, graph_aggr 8) with right-sized clusters (CostModel.chips_for)
+=> edges ~ $400/8.6h spot vs ~$730/5.7h premium, matching Table 1.
+"""
+from __future__ import annotations
+
+from repro.core import (AssetGraph, ComputeProfile, CostModel,
+                        DynamicClientFactory, MessageReader, MultiPartitions,
+                        Objective, RetryPolicy, RunCoordinator,
+                        StaticPartitions, TimeWindowPartitions, asset,
+                        default_catalog)
+from repro.data import commoncrawl as cc
+
+CRAWLS = TimeWindowPartitions("2023-10", "2024-03")  # paper's access window
+DOMAIN_SHARDS = StaticPartitions(("shard-0", "shard-1"))
+PARTS = MultiPartitions(dims=(("time", CRAWLS), ("domain", DOMAIN_SHARDS)))
+SMALL = MultiPartitions(dims=(
+    ("time", StaticPartitions(("2023-10",))),
+    ("domain", StaticPartitions(("shard-0",))),
+))
+
+# work_chip_hours back-solved from Table 1 base costs at the spot rate
+# ($0.139/chip-h effective): work = base_usd / rate (see DESIGN.md §7)
+PROFILES = {
+    "nodes": ComputeProfile(work_chip_hours=2.3, speedup_class="light"),
+    "edges": ComputeProfile(work_chip_hours=2200.0, speedup_class="scan"),
+    "graph": ComputeProfile(work_chip_hours=26.0, speedup_class="shuffle"),
+    "graph_aggr": ComputeProfile(work_chip_hours=8.0, speedup_class="light"),
+}
+
+
+def build_graph(cfg: cc.CrawlConfig | None = None,
+                partitions=None, hints: dict | None = None) -> AssetGraph:
+    cfg = cfg or cc.CrawlConfig(n_domains=32, n_pages_per_domain=4, n_seed=24,
+                                max_links=6, tokens_per_page=32)
+    hints = hints or {}
+    parts = partitions if partitions is not None else PARTS
+    retry = RetryPolicy(max_attempts=6, backoff_s=0.0, failover_after=2)
+
+    def crawl_shard(ctx):
+        dims = ctx.partition_key.split("/")
+        return dims[0], dims[-1]
+
+    @asset(name="nodes", partitions=parts, compute=PROFILES["nodes"],
+           retry=retry, platform_hint=hints.get("nodes"))
+    def nodes(ctx):
+        crawl, shard = crawl_shard(ctx)
+        return cc.nodes_asset(crawl, shard, cfg)
+
+    @asset(name="edges", deps=("nodes",), partitions=parts,
+           compute=PROFILES["edges"], retry=retry,
+           platform_hint=hints.get("edges"))
+    def edges(ctx, nodes):
+        crawl, shard = crawl_shard(ctx)
+        return cc.edges_asset(crawl, shard, nodes, cfg)
+
+    @asset(name="graph", deps=("nodes", "edges"), partitions=parts,
+           compute=PROFILES["graph"], retry=retry,
+           platform_hint=hints.get("graph"))
+    def graph(ctx, nodes, edges):
+        return cc.graph_asset(nodes, edges)
+
+    @asset(name="graph_aggr", deps=("graph",), partitions=parts,
+           compute=PROFILES["graph_aggr"], retry=retry,
+           platform_hint=hints.get("graph_aggr"))
+    def graph_aggr(ctx, graph):
+        return cc.graph_aggr_asset(graph, cfg)
+
+    return AssetGraph([nodes, edges, graph, graph_aggr])
+
+
+def run_policy(policy: str, seed: int = 0, partitions=None,
+               objective: Objective | None = None):
+    """policy: 'orchestrated' (dynamic factory) | 'all-spot' | 'all-premium'
+    | 'paper-mix' (run-1 of Table 1: edges on EMR, graph on DBR)."""
+    hints = {}
+    if policy == "all-spot":
+        hints = {k: "pod-spot" for k in PROFILES}
+    elif policy == "all-premium":
+        hints = {k: "pod-premium" for k in PROFILES}
+    elif policy == "paper-mix":
+        hints = {"nodes": "pod-spot", "edges": "pod-spot",
+                 "graph": "pod-premium", "graph_aggr": "pod-spot"}
+    g = build_graph(partitions=partitions, hints=hints)
+    reader = MessageReader()
+    factory = DynamicClientFactory(default_catalog(), CostModel(),
+                                   objective or Objective.balanced(),
+                                   sim_seed=seed)
+    coord = RunCoordinator(g, factory, reader=reader, use_cache=False)
+    report = coord.materialize(["graph_aggr"], run_id=f"{policy}-{seed}")
+    return report, reader

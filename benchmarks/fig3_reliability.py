@@ -1,0 +1,46 @@
+"""Fig 3: stacked run outcomes (success / failure / cancelled) by platform
+under fault injection, and the ~2x trial-run gap between the cheap and the
+managed platform before production stability.
+"""
+from __future__ import annotations
+
+from benchmarks.cc_pipeline import SMALL, run_policy
+
+
+def run(n_seeds: int = 10) -> dict:
+    counts = {"pod-spot": {"success": 0, "failure": 0, "cancelled": 0},
+              "pod-premium": {"success": 0, "failure": 0, "cancelled": 0}}
+    attempts = {"pod-spot": [], "pod-premium": []}
+    for seed in range(n_seeds):
+        for policy, plat in (("all-spot", "pod-spot"),
+                             ("all-premium", "pod-premium")):
+            report, reader = run_policy(policy, seed=100 + seed,
+                                        partitions=SMALL)
+            oc = reader.outcome_counts().get(plat,
+                                             {"success": 0, "failure": 0,
+                                              "cancelled": 0})
+            for k in counts[plat]:
+                counts[plat][k] += oc.get(k, 0)
+            attempts[plat].append(
+                sum(len(r.attempts) for r in report.records))
+    spot_attempts = sum(attempts["pod-spot"]) / max(1, n_seeds)
+    prem_attempts = sum(attempts["pod-premium"]) / max(1, n_seeds)
+    spot_runs = counts["pod-spot"]
+    prem_runs = counts["pod-premium"]
+    spot_fail_rate = spot_runs["failure"] / max(
+        1, sum(spot_runs.values()))
+    prem_fail_rate = prem_runs["failure"] / max(
+        1, sum(prem_runs.values()))
+    return {
+        "outcomes": counts,
+        "mean_attempts_per_pipeline": {"pod-spot": spot_attempts,
+                                       "pod-premium": prem_attempts},
+        "trial_ratio_spot_over_premium": spot_attempts / max(prem_attempts, 1e-9),
+        "failure_rate": {"pod-spot": spot_fail_rate,
+                         "pod-premium": prem_fail_rate},
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1, default=float))

@@ -1,0 +1,39 @@
+"""Fig 6: run-duration distributions per step and platform (premium's
+optimized runtime consistently shortens the heavy steps)."""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.cc_pipeline import SMALL, run_policy
+
+
+def run(n_seeds: int = 10) -> dict:
+    durs: dict[tuple[str, str], list[float]] = {}
+    for seed in range(n_seeds):
+        for policy, plat in (("all-spot", "pod-spot"),
+                             ("all-premium", "pod-premium")):
+            _, reader = run_policy(policy, seed=200 + seed, partitions=SMALL)
+            for ev in reader.events(kind="SUCCESS"):
+                durs.setdefault((ev.asset, plat), []).append(
+                    ev.payload["duration_s"] / 3600.0)
+    table = {}
+    for (a, p), vals in sorted(durs.items()):
+        table[f"{a}@{p}"] = {
+            "median_h": round(statistics.median(vals), 3),
+            "p90_h": round(sorted(vals)[int(0.9 * (len(vals) - 1))], 3),
+            "n": len(vals),
+        }
+    # premium must be consistently faster on the heavy chip-capped step
+    # (Fig 6): edges 8.7 h vs 5.9 h expected, robust against the 18% jitter.
+    # Right-sized small assets absorb the Photon speedup into cluster size,
+    # leaving only startup latency (0.98 vs 0.90 h expected) — inside jitter
+    # noise at benchmark sample counts, so reported but not asserted.
+    spot = table["edges@pod-spot"]["median_h"]
+    prem = table["edges@pod-premium"]["median_h"]
+    assert spot > 1.25 * prem, ("edges", spot, prem)
+    return table
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1, default=float))

@@ -1,0 +1,62 @@
+"""The paper's decision logic applied to the LM substrate: feed each
+(arch x shape) cell's dry-run roofline terms into the Dynamic Factory and
+let the cost model choose the execution platform + price the job.
+
+This is the end-to-end integration of the two halves of the framework — the
+orchestrator prices LM training/serving assets exactly the way it prices the
+paper's Common-Crawl assets (DESIGN.md §2): duration = max(compute, memory,
+collective roofline term) x steps / perf_factor; cost = Table-1 structure.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core import (ComputeProfile, CostModel, DynamicClientFactory,
+                        Objective, asset, default_catalog)
+
+ART_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def profile_from_cell(cell: dict, steps: int = 1000) -> ComputeProfile:
+    n = cell["n_chips"]
+    return ComputeProfile(
+        flops=cell["analytic_flops_per_device"] * n * steps,
+        bytes_hbm=cell["analytic_hbm_bytes_per_device"] * n * steps,
+        collective_bytes=cell["collective_bytes"]["total"] * n * steps,
+        speedup_class="train" if cell["kind"] == "train" else "serve",
+        min_chips=64,
+        memory_gb_per_chip=(cell["memory_analysis"]
+                            .get("argument_size_in_bytes", 0) / 2**30),
+    )
+
+
+def run(steps: int = 1000) -> dict:
+    factory = DynamicClientFactory(default_catalog(), CostModel(),
+                                   Objective.balanced(), sim_seed=0)
+    out = {}
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*__16x16.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("status") != "ok":
+            continue
+        name = f"{cell['arch']}:{cell['shape']}"
+        spec = asset(name=name, compute=profile_from_cell(cell, steps))(
+            lambda ctx: None)
+        platform, est = factory.choose(spec)
+        out[name] = {
+            "platform": platform.name,
+            "duration_h": round(est.duration_s / 3600.0, 2),
+            "cost_usd": round(est.total_usd, 2),
+            "surcharge_usd": round(est.surcharge_usd, 2),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    table = run()
+    print(f"{'cell':<38} {'platform':<16} {'hours':>7} {'cost':>10}")
+    for k, v in table.items():
+        print(f"{k:<38} {v['platform']:<16} {v['duration_h']:>7.2f} "
+              f"${v['cost_usd']:>9.2f}")

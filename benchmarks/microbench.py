@@ -1,0 +1,107 @@
+"""Substrate microbenchmarks (wall-clock on this host's CPU device; the
+numbers feed the us_per_call CSV column and regression-track the XLA paths)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def attention_core_us() -> float:
+    from repro.models.attention import attention_core
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, D = 1, 2048, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    fn = jax.jit(lambda q, k, v: attention_core(q, k, v, pos, pos,
+                                                causal=True))
+    return _bench(fn, q, k, v)
+
+
+def wkv_chunked_us() -> float:
+    from repro.models.recurrent import wkv_chunked
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    B, S, H, N = 1, 1024, 4, 64
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, N), jnp.float32)
+               for i in range(3))
+    lw = -jnp.exp(jax.random.uniform(ks[3], (B, S, H, N), jnp.float32,
+                                     -6.0, 0.0))
+    u = jax.random.normal(ks[4], (H, N), jnp.float32) * 0.1
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    fn = jax.jit(lambda *a: wkv_chunked(*a)[0])
+    return _bench(fn, r, k, v, lw, u, s0)
+
+
+def moe_dense_us() -> float:
+    from repro.configs import get_config
+    from repro.models import moe as moe_mod
+    cfg = get_config("granite-moe-1b-a400m").scaled(
+        d_model=256, n_experts=8, top_k=2, d_ff_expert=128)
+    p, _ = _split(moe_mod.init_moe(jax.random.PRNGKey(0), cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, 256), jnp.bfloat16)
+    fn = jax.jit(lambda p, x: moe_mod.apply_moe(p, cfg, x)[0])
+    return _bench(fn, p, x)
+
+
+def _split(tree):
+    from repro.models.layers import split
+    return split(tree)
+
+
+def train_step_us() -> float:
+    from repro.launch.train import make_train_step, smoke_config
+    from repro.models import LanguageModel
+    from repro.optim import AdamW, OptConfig
+    cfg = smoke_config("deepseek-7b")
+    model = LanguageModel(cfg)
+    opt = AdamW(OptConfig())
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    rng = np.random.RandomState(0)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 64)), jnp.int32),
+        "targets": jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 64)), jnp.int32),
+        "weights": jnp.ones((4, 64), jnp.float32),
+    }
+    step = make_train_step(model, opt)
+    params, state, _ = step(params, state, batch)  # compile + donate warmup
+
+    def run_once():
+        nonlocal params, state
+        params, state, m = step(params, state, batch)
+        return m["loss"]
+
+    t0 = time.perf_counter()
+    iters = 5
+    for _ in range(iters):
+        out = run_once()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> dict:
+    return {
+        "attention_core_2k": attention_core_us(),
+        "wkv_chunked_1k": wkv_chunked_us(),
+        "moe_dense_small": moe_dense_us(),
+        "train_step_smoke_7b_cfg": train_step_us(),
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v:.1f} us")

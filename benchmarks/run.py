@@ -1,0 +1,88 @@
+"""Benchmark runner — one entry per paper table/figure plus the roofline and
+substrate microbenchmarks.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import json
+import time
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def main() -> None:
+    rows: list[tuple[str, float, str]] = []
+
+    from benchmarks import table1_cost
+    us, t1 = _timed(table1_cost.run)
+    claims = t1["claims"]
+    rows.append(("table1_cost", us,
+                 f"cost_reduction_vs_premium={claims['cost_reduction_vs_premium_table_basis']:.3f};"
+                 f"cost_reduction_simulated={claims['cost_reduction_vs_premium_simulated']:.3f};"
+                 f"tuning_improvement={claims['tuning_improvement_vs_untuned_spot']:.3f};"
+                 f"savings_usd={claims['savings_usd_per_run']:.0f}"))
+
+    from benchmarks import fig3_reliability
+    us, f3 = _timed(lambda: fig3_reliability.run(n_seeds=6))
+    rows.append(("fig3_reliability", us,
+                 f"trial_ratio={f3['trial_ratio_spot_over_premium']:.2f};"
+                 f"spot_fail={f3['failure_rate']['pod-spot']:.2f};"
+                 f"premium_fail={f3['failure_rate']['pod-premium']:.2f}"))
+
+    from benchmarks import fig4_effort
+    us, f4 = _timed(fig4_effort.run)
+    rows.append(("fig4_effort", us,
+                 f"trial_ratio={f4['trial_ratio_spot_over_premium']:.2f};"
+                 f"spot_changes={f4['pod-spot']['mean_changes']:.1f};"
+                 f"premium_changes={f4['pod-premium']['mean_changes']:.1f}"))
+
+    from benchmarks import fig5_cost_by_asset
+    us, f5 = _timed(fig5_cost_by_asset.run)
+    rows.append(("fig5_cost_by_asset", us,
+                 f"orchestrated_total={f5['orchestrated']['total_cost']:.0f};"
+                 f"premium_total={f5['all-premium']['total_cost']:.0f}"))
+
+    from benchmarks import fig6_durations
+    us, f6 = _timed(lambda: fig6_durations.run(n_seeds=6))
+    edges_ratio = (f6["edges@pod-spot"]["median_h"]
+                   / f6["edges@pod-premium"]["median_h"])
+    rows.append(("fig6_durations", us,
+                 f"edges_spot_over_premium={edges_ratio:.2f}"))
+
+    from benchmarks import roofline
+    us, rf = _timed(roofline.run)
+    rows.append(("roofline", us,
+                 f"ok={rf['n_ok']};skipped={rf['n_skipped']};"
+                 f"errors={rf['n_error']};multipod_ok={rf['n_multipod_ok']};"
+                 f"mean_mfu_train={rf['mean_mfu_train']:.3f};"
+                 f"best_mfu_train={rf['best_mfu_train']:.3f};"
+                 f"mean_mfu_prefill={rf['mean_mfu_prefill']:.3f}"))
+
+    from benchmarks import lm_platform_choice
+    us, lm = _timed(lm_platform_choice.run)
+    train_cells = {k: v for k, v in lm.items() if "train" in k}
+    prem = sum(1 for v in train_cells.values()
+               if v["platform"] == "pod-premium")
+    rows.append(("lm_platform_choice", us,
+                 f"cells={len(lm)};train_on_premium={prem}/"
+                 f"{len(train_cells)}"))
+
+    from benchmarks import microbench
+    for name, val in microbench.run().items():
+        rows.append((f"micro_{name}", val, ""))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    with open("artifacts/bench_results.json", "w") as f:
+        json.dump({"table1": t1, "fig3": f3, "fig4": f4, "fig5": f5,
+                   "fig6": f6, "lm_platform_choice": lm,
+                   "roofline": {k: v for k, v in rf.items() if k != "rows"}},
+                  f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

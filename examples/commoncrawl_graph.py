@@ -1,0 +1,42 @@
+"""The paper's §5 use case end-to-end: mine a web-based inter-firm network
+from (synthetic) Common-Crawl data with the 4-asset pipeline, partitioned by
+crawl-month x domain-shard, dispatched across platforms by cost.
+
+    PYTHONPATH=src python examples/commoncrawl_graph.py
+"""
+from benchmarks.cc_pipeline import build_graph
+from repro.core import (CostModel, DynamicClientFactory, MessageReader,
+                        MultiPartitions, Objective, RunCoordinator,
+                        StaticPartitions, default_catalog)
+
+PARTS = MultiPartitions(dims=(
+    ("time", StaticPartitions(("2023-10", "2023-11"))),
+    ("domain", StaticPartitions(("shard-0", "shard-1"))),
+))
+
+
+def main() -> None:
+    graph = build_graph(partitions=PARTS)
+    reader = MessageReader()
+    factory = DynamicClientFactory(default_catalog(), CostModel(),
+                                   Objective.balanced(), sim_seed=3)
+    coord = RunCoordinator(graph, factory, reader=reader)
+    report = coord.materialize(["graph_aggr"])
+    print(report.summary())
+
+    agg = coord.store.get("graph_aggr", "2023-10/shard-0")
+    print(f"\ndomain-level graph (2023-10/shard-0): "
+          f"{len(agg['weight'])} inter-domain edges, "
+          f"{agg['n_domains']} domains")
+    top = sorted(zip(agg["weight"], agg["src_domain"], agg["dst_domain"]),
+                 reverse=True)[:5]
+    for w, s, d in top:
+        print(f"  domain {s:>3} -> domain {d:>3}  weight {w:.2f}")
+
+    print("\nper-platform outcomes (Fig 3 view):", reader.outcome_counts())
+    print("cost by asset (Fig 5 view):",
+          {k: round(v, 2) for k, v in report.by_asset_cost().items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: define two assets, let the Dynamic Factory pick platforms,
+materialize, and inspect cost/telemetry.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (AssetGraph, ComputeProfile, CostModel,
+                        DynamicClientFactory, Objective, RunCoordinator,
+                        StaticPartitions, asset, default_catalog)
+
+parts = StaticPartitions(("2024-01", "2024-02"))
+
+
+@asset(name="raw_counts", partitions=parts,
+       compute=ComputeProfile(work_chip_hours=50.0, speedup_class="scan"))
+def raw_counts(ctx):
+    ctx.log("HEARTBEAT", stage="counting")
+    return {"month": ctx.partition_key, "count": 1000 + len(ctx.partition_key)}
+
+
+@asset(name="report", deps=("raw_counts",),
+       compute=ComputeProfile(work_chip_hours=1.0, speedup_class="light"))
+def report(ctx, raw_counts):
+    total = sum(v["count"] for v in raw_counts.values())
+    return {"total": total, "months": sorted(raw_counts)}
+
+
+def main() -> None:
+    graph = AssetGraph([raw_counts, report])
+    factory = DynamicClientFactory(default_catalog(), CostModel(),
+                                   Objective.balanced(), sim_seed=42)
+    coord = RunCoordinator(graph, factory)
+    rep = coord.materialize(["report"])
+    print(rep.summary())
+    print("result:", coord.store.get("report", "__all__"))
+    print("total simulated cost: $%.2f" % rep.total_cost)
+    for name, spec in (("raw_counts", graph["raw_counts"]),
+                       ("report", graph["report"])):
+        platform, est = factory.choose(spec)
+        print(f"factory would run {name!r} on {platform.name} "
+              f"(${est.total_usd:.2f}, {est.duration_s / 3600:.2f} h)")
+
+
+if __name__ == "__main__":
+    main()

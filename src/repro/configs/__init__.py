@@ -1,0 +1,23 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    applicable_shapes,
+    get_config,
+    list_configs,
+    register,
+)
+
+# Import arch modules for registration side effects.
+from repro.configs import (  # noqa: F401
+    whisper_medium,
+    h2o_danube_1_8b,
+    gemma_2b,
+    minicpm3_4b,
+    deepseek_7b,
+    recurrentgemma_9b,
+    deepseek_v2_236b,
+    granite_moe_1b_a400m,
+    qwen2_vl_72b,
+    rwkv6_1_6b,
+)

@@ -1,0 +1,14 @@
+"""The paper's contribution: cost-effective multi-platform orchestration."""
+from repro.core.assets import (AssetGraph, AssetSpec, ComputeProfile,  # noqa: F401
+                               RetryPolicy, asset)
+from repro.core.clients import (JobSpec, LocalClient, PlatformClient,  # noqa: F401
+                                PlatformError, SimulatedClusterClient)
+from repro.core.context import ContextInjector, RunContext  # noqa: F401
+from repro.core.coordinator import RunCoordinator, RunReport  # noqa: F401
+from repro.core.costmodel import CostEstimate, CostModel  # noqa: F401
+from repro.core.factory import DynamicClientFactory, Objective  # noqa: F401
+from repro.core.partitions import (MultiPartitions, PartitionsDefinition,  # noqa: F401
+                                   StaticPartitions, TimeWindowPartitions)
+from repro.core.platforms import Platform, default_catalog  # noqa: F401
+from repro.core.store import MaterializationStore  # noqa: F401
+from repro.core.telemetry import Event, MessageReader  # noqa: F401

@@ -1,0 +1,437 @@
+"""Run Coordinator: DAG scheduling with retries, platform failover,
+speculative straggler re-execution and elastic per-platform concurrency.
+
+Failure semantics mirror the paper's operational reality (Fig 3): failed
+attempts still bill (EMR burning money on flaky runs is why the mixed policy
+wins), preemptions are distinguished from hard failures, and after
+``retry.failover_after`` attempts on one platform the Dynamic Factory is
+re-consulted with that platform deny-listed — the orchestration-level answer
+to "EMR needs continual oversight".
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import uuid
+from typing import Any
+
+from repro.core.assets import AssetGraph, AssetSpec
+from repro.core.clients import JobSpec, PlatformError, RunHandle
+from repro.core.context import ContextInjector
+from repro.core.costmodel import CostEstimate
+from repro.core.factory import DynamicClientFactory
+from repro.core.partitions import partition_keys
+from repro.core.store import MaterializationStore
+from repro.core.telemetry import MessageReader
+
+
+@dataclasses.dataclass
+class AttemptRecord:
+    platform: str
+    status: str  # success | failure | preemption | cancelled
+    sim_duration_s: float
+    cost_usd: float
+    speculative: bool = False
+    error: str = ""
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    asset: str
+    partition: str
+    attempts: list[AttemptRecord] = dataclasses.field(default_factory=list)
+    status: str = "pending"
+    cached: bool = False
+
+    @property
+    def platform(self) -> str:
+        return self.attempts[-1].platform if self.attempts else ""
+
+    @property
+    def total_sim_s(self) -> float:
+        return sum(a.sim_duration_s for a in self.attempts)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(a.cost_usd for a in self.attempts)
+
+
+@dataclasses.dataclass
+class RunReport:
+    run_id: str
+    records: list[TaskRecord]
+    graph: AssetGraph
+
+    @property
+    def ok(self) -> bool:
+        return all(r.status == "success" for r in self.records)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(r.total_cost for r in self.records)
+
+    def makespan_s(self) -> float:
+        """Critical-path simulated duration through the (asset, partition) DAG."""
+        finish: dict[tuple[str, str], float] = {}
+        by_asset: dict[str, list[TaskRecord]] = {}
+        for r in self.records:
+            by_asset.setdefault(r.asset, []).append(r)
+        for name in self.graph.topo_order([r.asset for r in self.records]):
+            spec = self.graph[name]
+            for r in by_asset.get(name, []):
+                dep_done = 0.0
+                for d in spec.deps:
+                    for dr in by_asset.get(d, []):
+                        if dr.partition in (r.partition, "__all__") or \
+                                r.partition == "__all__":
+                            dep_done = max(dep_done,
+                                           finish.get((d, dr.partition), 0.0))
+                finish[(name, r.partition)] = dep_done + r.total_sim_s
+        return max(finish.values()) if finish else 0.0
+
+    def by_asset_cost(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for r in self.records:
+            out[r.asset] = out.get(r.asset, 0.0) + r.total_cost
+        return out
+
+    def summary(self) -> str:
+        lines = [f"run {self.run_id}: {len(self.records)} tasks, "
+                 f"cost ${self.total_cost:.2f}, "
+                 f"makespan {self.makespan_s() / 3600.0:.2f} h, ok={self.ok}"]
+        for r in self.records:
+            lines.append(
+                f"  {r.asset}[{r.partition}] -> {r.platform} "
+                f"({len(r.attempts)} attempts, {r.status}"
+                f"{', cached' if r.cached else ''}) "
+                f"${r.total_cost:.2f} / {r.total_sim_s / 3600.0:.3f} h")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class _Task:
+    spec: AssetSpec
+    partition: str
+    record: TaskRecord
+    attempt: int = 0
+    deny: set[str] = dataclasses.field(default_factory=set)
+    handle: RunHandle | None = None
+    spec_handle: RunHandle | None = None  # speculative duplicate
+    speculated: bool = False  # at most one speculative twin per attempt
+    estimate: CostEstimate | None = None
+    spec_estimate: CostEstimate | None = None
+    launched_at: float = 0.0
+    next_eligible: float = 0.0
+    fingerprint: str = ""
+
+
+class RunCoordinator:
+    def __init__(self, graph: AssetGraph, factory: DynamicClientFactory,
+                 store: MaterializationStore | None = None,
+                 reader: MessageReader | None = None,
+                 injector: ContextInjector | None = None,
+                 max_concurrent: int = 8,
+                 platform_slots: int = 2,
+                 elastic_max_slots: int = 8,
+                 straggler_factor: float = 2.5,
+                 straggler_min_s: float = 0.05,
+                 enable_speculation: bool = True,
+                 use_cache: bool = True):
+        graph.validate()
+        self.graph = graph
+        self.factory = factory
+        self.store = store or MaterializationStore()
+        self.reader = reader or MessageReader()
+        self.injector = injector or ContextInjector(reader=self.reader)
+        self.injector.reader = self.reader
+        self.max_concurrent = max_concurrent
+        self.platform_slots = platform_slots
+        self.elastic_max_slots = elastic_max_slots
+        self.straggler_factor = straggler_factor
+        self.straggler_min_s = straggler_min_s
+        self.enable_speculation = enable_speculation
+        self.use_cache = use_cache
+
+    # ------------------------------------------------------------------ api
+    def materialize(self, targets: list[str] | None = None,
+                    run_id: str | None = None) -> RunReport:
+        run_id = run_id or uuid.uuid4().hex[:10]
+        order = self.graph.topo_order(targets)
+        tasks: dict[tuple[str, str], _Task] = {}
+        records: list[TaskRecord] = []
+        for name in order:
+            spec = self.graph[name]
+            for key in partition_keys(spec.partitions):
+                rec = TaskRecord(asset=name, partition=key)
+                records.append(rec)
+                tasks[(name, key)] = _Task(spec=spec, partition=key, record=rec)
+
+        slots: dict[str, int] = {}  # platform -> current slot budget
+        running: list[_Task] = []
+        done: set[tuple[str, str]] = set()
+        failed_hard: set[tuple[str, str]] = set()
+
+        def deps_ready(t: _Task) -> bool:
+            for d in t.spec.deps:
+                dspec = self.graph[d]
+                for k in self._dep_keys(dspec, t.partition):
+                    if (d, k) not in done:
+                        return False
+            return True
+
+        def dep_values(t: _Task) -> dict[str, Any]:
+            vals: dict[str, Any] = {}
+            for d in t.spec.deps:
+                dspec = self.graph[d]
+                keys = self._dep_keys(dspec, t.partition)
+                if len(keys) == 1:
+                    vals[d] = self.store.get(d, keys[0])
+                else:
+                    vals[d] = {k: self.store.get(d, k) for k in keys}
+            return vals
+
+        def upstream_fingerprints(t: _Task) -> dict[str, str]:
+            out = {}
+            for d in t.spec.deps:
+                dspec = self.graph[d]
+                for k in self._dep_keys(dspec, t.partition):
+                    rec = self.store.record(d, k)
+                    out[f"{d}[{k}]"] = rec["fingerprint"] if rec else "?"
+            return out
+
+        pending = list(tasks.values())
+        while pending or running:
+            # ---------------- launch ready tasks ------------------------
+            now = time.time()
+            launchable = [t for t in pending
+                          if deps_ready(t) and now >= t.next_eligible]
+            for t in launchable:
+                if len(running) >= self.max_concurrent:
+                    break
+                # cache hit?
+                fp = self.store.fingerprint(t.spec.version, t.partition,
+                                            upstream_fingerprints(t))
+                t.fingerprint = fp
+                if self.use_cache and self.store.is_fresh(
+                        t.spec.name, t.partition, fp):
+                    t.record.status = "success"
+                    t.record.cached = True
+                    done.add((t.spec.name, t.partition))
+                    pending.remove(t)
+                    self.reader.emit(run_id, t.spec.name, t.partition,
+                                     "cache", "SUCCESS", duration_s=0.0,
+                                     cached=True)
+                    continue
+                try:
+                    platform, est = self.factory.choose(t.spec, deny=t.deny)
+                except RuntimeError:
+                    # every platform deny-listed: reset and take the best
+                    # remaining option anyway (failures were transient)
+                    t.deny.clear()
+                    self.reader.emit(run_id, t.spec.name, t.partition, "",
+                                     "DENY_RESET")
+                    platform, est = self.factory.choose(t.spec)
+                # elastic scaling: grow this platform's slot budget while a
+                # backlog exists (paper: "automatic scaling")
+                cur = slots.get(platform.name, self.platform_slots)
+                in_use = sum(1 for r in running
+                             if r.handle and r.handle.platform == platform.name)
+                if in_use >= cur:
+                    if cur < self.elastic_max_slots:
+                        slots[platform.name] = cur + 1
+                        self.reader.emit(run_id, t.spec.name, t.partition,
+                                         platform.name, "SCALING",
+                                         slots=cur + 1)
+                    else:
+                        continue  # saturated; try next loop
+                t.attempt += 1
+                t.estimate = est
+                ctx = self.injector.build(run_id, t.spec, t.partition,
+                                          platform, t.attempt)
+                job = JobSpec(fn=t.spec.fn, args=(), kwargs=dep_values(t),
+                              ctx=ctx, estimate=est)
+                self.reader.emit(run_id, t.spec.name, t.partition,
+                                 platform.name, "SUBMIT",
+                                 attempt=t.attempt,
+                                 est_usd=est.total_usd,
+                                 est_duration_s=est.duration_s)
+                t.handle = self.factory.client(platform).submit(job)
+                t.launched_at = now
+                pending.remove(t)
+                running.append(t)
+                self.reader.emit(run_id, t.spec.name, t.partition,
+                                 platform.name, "START", attempt=t.attempt)
+
+            # ---------------- check completions -------------------------
+            time.sleep(0.0005)
+            for t in list(running):
+                prim, spec = t.handle, t.spec_handle
+                prim_done = prim is not None and prim.done()
+                spec_done = spec is not None and spec.done()
+                if not (prim_done or spec_done):
+                    self._maybe_speculate(run_id, t)
+                    continue
+                prim_ok = (prim_done and prim.error is None
+                           and not prim.cancelled)
+                spec_ok = (spec_done and spec is not None
+                           and spec.error is None and not spec.cancelled)
+
+                if prim_ok or spec_ok:
+                    if prim_ok:
+                        h, est, speculative, other, o_est = (
+                            prim, t.estimate, False, spec, t.spec_estimate)
+                    else:
+                        h, est, speculative, other, o_est = (
+                            spec, t.spec_estimate, True, prim, t.estimate)
+                    running.remove(t)
+                    if other is not None and not other.done():
+                        other.cancelled = True
+                        self.reader.emit(run_id, t.spec.name, t.partition,
+                                         other.platform, "CANCEL",
+                                         reason="speculative twin won")
+                        t.record.attempts.append(AttemptRecord(
+                            other.platform, "cancelled", 0.0, 0.0))
+                    elif other is not None and other.error is not None:
+                        self._record_failed_attempt(run_id, t, other, o_est)
+                    self._on_success(run_id, t, h, est, speculative, done)
+                    t.handle = t.spec_handle = None
+                    continue
+
+                # a speculative twin failed while the primary still runs:
+                # bill + record it, drop the twin, keep waiting
+                if spec_done and spec is not None and not spec_ok \
+                        and not prim_done:
+                    self._record_failed_attempt(run_id, t, spec,
+                                                t.spec_estimate)
+                    t.spec_handle = t.spec_estimate = None
+                    continue
+
+                # primary failed (twin absent, failed, or also finished)
+                running.remove(t)
+                if spec_done and spec is not None and not spec_ok:
+                    self._record_failed_attempt(run_id, t, spec,
+                                                t.spec_estimate)
+                self._on_failure(run_id, t, prim, t.estimate, pending,
+                                 failed_hard)
+                t.handle = t.spec_handle = None
+
+        return RunReport(run_id=run_id, records=records, graph=self.graph)
+
+    # ------------------------------------------------------------ internals
+    def _dep_keys(self, dspec: AssetSpec, partition: str) -> list[str]:
+        dkeys = partition_keys(dspec.partitions)
+        if partition in dkeys:
+            return [partition]
+        if dkeys == ["__all__"]:
+            return ["__all__"]
+        return dkeys  # fan-in: downstream consumes every upstream partition
+
+    def _maybe_speculate(self, run_id: str, t: _Task) -> None:
+        if (not self.enable_speculation or t.spec_handle is not None
+                or t.speculated or t.handle is None):
+            return
+        med = self.reader.median_duration(t.spec.name)
+        if med is None:
+            return
+        elapsed = time.time() - t.launched_at
+        sim_scale = getattr(self.factory.client(
+            self.factory.catalog[t.handle.platform]), "sim_time_scale", 0.0)
+        if sim_scale <= 0.0:
+            # pure-accounting mode: runs complete instantly, so wall-clock
+            # carries no straggler signal — speculating here would just add
+            # load-dependent nondeterminism (real clients always have one)
+            return
+        threshold = max(self.straggler_min_s,
+                        self.straggler_factor * med * sim_scale)
+        if elapsed < threshold:
+            return
+        try:
+            platform, est = self.factory.choose(t.spec,
+                                                deny={t.handle.platform})
+        except RuntimeError:
+            return
+        ctx = self.injector.build(run_id, t.spec, t.partition, platform,
+                                  t.attempt, overrides={"SPECULATIVE": "1"})
+        # speculative duplicate re-reads inputs from the store
+        vals = {}
+        for d in t.spec.deps:
+            dspec = self.graph[d]
+            keys = self._dep_keys(dspec, t.partition)
+            vals[d] = (self.store.get(d, keys[0]) if len(keys) == 1
+                       else {k: self.store.get(d, k) for k in keys})
+        job = JobSpec(fn=t.spec.fn, args=(), kwargs=vals, ctx=ctx,
+                      estimate=est)
+        t.spec_handle = self.factory.client(platform).submit(job)
+        t.spec_estimate = est
+        self.reader.emit(run_id, t.spec.name, t.partition, platform.name,
+                         "SPECULATE", original=t.handle.platform)
+        t.speculated = True
+
+    def _bill(self, run_id: str, t: _Task, h: RunHandle,
+              est: CostEstimate | None) -> tuple[float, float]:
+        est_total = est.total_usd if est else 0.0
+        est_dur = est.duration_s if est else 1e-9
+        sim = h.sim_duration_s or max(h.finished - h.started, 1e-9)
+        cost = est_total * (sim / max(est_dur, 1e-9))
+        self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
+                         "COST", total_usd=cost, duration_s=sim,
+                         attempt=t.attempt)
+        return sim, cost
+
+    def _record_failed_attempt(self, run_id: str, t: _Task, h: RunHandle,
+                               est: CostEstimate | None) -> None:
+        """A failed handle that does NOT end the task (e.g. a speculative
+        twin): billed and recorded, no retry bookkeeping."""
+        sim, cost = self._bill(run_id, t, h, est)
+        kind = (h.error.kind if isinstance(h.error, PlatformError)
+                else "failure")
+        t.record.attempts.append(AttemptRecord(
+            h.platform, kind, sim, cost, speculative=True,
+            error=str(h.error)))
+        self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
+                         "FAILURE", attempt=t.attempt, failure_kind=kind,
+                         speculative=True, error=str(h.error))
+
+    def _on_success(self, run_id: str, t: _Task, h: RunHandle,
+                    est: CostEstimate | None, speculative: bool,
+                    done: set) -> None:
+        sim, cost = self._bill(run_id, t, h, est)
+        self.store.put(t.spec.name, t.partition, h.result, t.fingerprint,
+                       meta={"platform": h.platform, "run_id": run_id})
+        t.record.attempts.append(AttemptRecord(
+            h.platform, "success", sim, cost, speculative))
+        t.record.status = "success"
+        done.add((t.spec.name, t.partition))
+        self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
+                         "MATERIALIZE", fingerprint=t.fingerprint)
+        self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
+                         "SUCCESS", duration_s=sim, cost_usd=cost,
+                         speculative=speculative)
+
+    def _on_failure(self, run_id: str, t: _Task, h: RunHandle,
+                    est: CostEstimate | None, pending: list,
+                    failed_hard: set) -> None:
+        sim, cost = self._bill(run_id, t, h, est)
+        kind = (h.error.kind if isinstance(h.error, PlatformError)
+                else "failure")
+        t.record.attempts.append(AttemptRecord(
+            h.platform, kind, sim, cost, error=str(h.error)))
+        self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
+                         "FAILURE", attempt=t.attempt, failure_kind=kind,
+                         error=str(h.error))
+        if t.attempt >= t.spec.retry.max_attempts:
+            t.record.status = "failed"
+            failed_hard.add((t.spec.name, t.partition))
+            raise RuntimeError(
+                f"asset {t.spec.name}[{t.partition}] failed after "
+                f"{t.attempt} attempts: {h.error}")
+        if t.attempt >= t.spec.retry.failover_after:
+            t.deny.add(h.platform)
+            self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
+                             "FAILOVER", deny=sorted(t.deny))
+        self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
+                         "RETRY", attempt=t.attempt + 1)
+        t.next_eligible = time.time() + t.spec.retry.backoff_s * t.attempt
+        t.speculated = False  # the retry may speculate once again
+        pending.append(t)

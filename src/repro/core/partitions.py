@@ -1,0 +1,73 @@
+"""Partitioning: time-window x static-domain, matching the paper's scheme
+("data is partitioned along two primary dimensions: time and domain").
+
+Keys are strings; multi-partition keys join dimensions with '/'.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+
+class PartitionsDefinition:
+    def keys(self) -> list[str]:
+        raise NotImplementedError
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.keys()
+
+    def __len__(self) -> int:
+        return len(self.keys())
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticPartitions(PartitionsDefinition):
+    names: tuple[str, ...]
+
+    def keys(self) -> list[str]:
+        return list(self.names)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeWindowPartitions(PartitionsDefinition):
+    """Monthly windows like Common Crawl CC-MAIN snapshots."""
+
+    start: str  # "2023-10"
+    end: str  # "2024-03" inclusive
+
+    def keys(self) -> list[str]:
+        y0, m0 = map(int, self.start.split("-"))
+        y1, m1 = map(int, self.end.split("-"))
+        out = []
+        y, m = y0, m0
+        while (y, m) <= (y1, m1):
+            out.append(f"{y:04d}-{m:02d}")
+            m += 1
+            if m > 12:
+                y, m = y + 1, 1
+        return out
+
+    @staticmethod
+    def of(*keys: str) -> "StaticPartitions":
+        return StaticPartitions(tuple(keys))
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiPartitions(PartitionsDefinition):
+    """Cross-product, e.g. crawl-month x domain-shard."""
+
+    dims: tuple[tuple[str, PartitionsDefinition], ...]
+
+    def keys(self) -> list[str]:
+        parts = [d.keys() for _, d in self.dims]
+        return ["/".join(combo) for combo in itertools.product(*parts)]
+
+    def split(self, key: str) -> dict[str, str]:
+        vals = key.split("/")
+        assert len(vals) == len(self.dims), (key, self.dims)
+        return {name: v for (name, _), v in zip(self.dims, vals)}
+
+
+def partition_keys(p: PartitionsDefinition | None) -> list[str]:
+    """None => a single unpartitioned pseudo-key."""
+    return p.keys() if p is not None else ["__all__"]

@@ -1,0 +1,88 @@
+"""Execution-platform catalog.
+
+The paper's platforms (local / EMR / Databricks) become TPU execution
+environments with the same *economic* structure: a base chip-hour rate, a
+platform surcharge (the DBU analogue), a runtime performance factor (the
+Photon analogue), a startup latency, and a reliability profile (EMR's higher
+failure rate, Fig 3).  Constants are calibrated to Table 1 — see
+DESIGN.md §7 and benchmarks/table1_cost.py.
+
+v5e hardware constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI — shared with the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+#: Photon-analogue: how much the premium runtime accelerates each workload
+#: class (calibrated: Table 1 edges ~1.5x, graph/shuffle ~2.4x, light ~1.2x).
+SPEEDUP_CLASSES = {
+    "scan": {"premium": 1.5},
+    "shuffle": {"premium": 2.4},
+    "light": {"premium": 1.2},
+    "train": {"premium": 1.25},
+    "serve": {"premium": 1.2},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    name: str
+    kind: str  # local | spot | premium | multipod
+    chips: int
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    chip_hour_usd: float
+    surcharge_rate: float  # fraction of base compute cost (DBU analogue)
+    perf_class: str = ""  # key into SPEEDUP_CLASSES factors ("" => 1.0)
+    startup_s: float = 0.0
+    failure_rate: float = 0.0  # P(run-level failure) per attempt
+    preemption_rate: float = 0.0  # P(preemption mid-run) per attempt
+    storage_usd_per_chip_hour: float = 0.0  # EBS-analogue
+    perf_factor_base: float = 1.0  # generic runtime speed multiplier
+
+    def perf_factor(self, speedup_class: str) -> float:
+        extra = SPEEDUP_CLASSES.get(speedup_class, {}).get(self.kind, 1.0) \
+            if self.kind == "premium" else 1.0
+        return self.perf_factor_base * extra
+
+    def effective_rate(self) -> float:
+        """USD per chip-hour including surcharge."""
+        return self.chip_hour_usd * (1.0 + self.surcharge_rate)
+
+
+def default_catalog() -> dict[str, Platform]:
+    """Calibrated to Table 1 economics (spot ~ EMR, premium ~ DBR)."""
+    base = 0.145  # spot-ish v5e $/chip-hour (relative scale is what matters)
+    return {
+        "local": Platform(
+            name="local", kind="local", chips=1, mesh_shape=(1,),
+            mesh_axes=("data",), chip_hour_usd=0.0, surcharge_rate=0.0,
+            perf_factor_base=0.02,  # debug-scale hardware
+        ),
+        "pod-spot": Platform(
+            name="pod-spot", kind="spot", chips=256, mesh_shape=(16, 16),
+            mesh_axes=("data", "model"), chip_hour_usd=base,
+            surcharge_rate=0.26,  # EMR service-fee ratio from Table 1
+            startup_s=300.0, failure_rate=0.22, preemption_rate=0.08,
+            storage_usd_per_chip_hour=0.006,  # EBS: edges $13.7 @ 8.6h*256
+        ),
+        "pod-premium": Platform(
+            name="pod-premium", kind="premium", chips=256, mesh_shape=(16, 16),
+            mesh_axes=("data", "model"), chip_hour_usd=base * 2.4,
+            surcharge_rate=0.48,  # DBU ratio from Table 1
+            perf_class="scan", startup_s=120.0, failure_rate=0.10,
+            preemption_rate=0.02, storage_usd_per_chip_hour=0.012,
+        ),
+        "multipod-spot": Platform(
+            name="multipod-spot", kind="spot", chips=512,
+            mesh_shape=(2, 16, 16), mesh_axes=("pod", "data", "model"),
+            chip_hour_usd=base, surcharge_rate=0.26, startup_s=420.0,
+            failure_rate=0.28, preemption_rate=0.10,
+            storage_usd_per_chip_hour=0.006,
+        ),
+    }

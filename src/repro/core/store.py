@@ -1,0 +1,75 @@
+"""Materialization store: lineage-tracked, content-fingerprinted asset
+outputs with freshness-based caching (the Delta-Lake-table analogue).
+
+The fingerprint of a materialization is hash(asset version, partition,
+upstream fingerprints); an asset run is skipped when a materialization with
+the current fingerprint already exists — the paper's reproducibility story
+("replication of scientific experiments under identical conditions").
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+import threading
+import time
+from typing import Any
+
+
+class MaterializationStore:
+    def __init__(self, directory: str | None = None):
+        self.dir = directory
+        self._mem: dict[tuple[str, str], dict] = {}
+        self._lock = threading.Lock()
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    @staticmethod
+    def fingerprint(version: str, partition: str,
+                    upstream: dict[str, str]) -> str:
+        blob = json.dumps({"v": version, "p": partition,
+                           "up": dict(sorted(upstream.items()))},
+                          sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    def _key(self, asset: str, partition: str) -> tuple[str, str]:
+        return (asset, partition)
+
+    def put(self, asset: str, partition: str, value: Any, fingerprint: str,
+            meta: dict | None = None) -> dict:
+        rec = {
+            "asset": asset, "partition": partition,
+            "fingerprint": fingerprint, "time": time.time(),
+            "meta": meta or {},
+        }
+        if self.dir:
+            fname = f"{asset}__{partition.replace('/', '_')}__{fingerprint}.pkl"
+            path = os.path.join(self.dir, fname)
+            with open(path + ".tmp", "wb") as f:
+                pickle.dump(value, f)
+            os.replace(path + ".tmp", path)
+            rec["path"] = path
+        else:
+            rec["value"] = value
+        with self._lock:
+            self._mem[self._key(asset, partition)] = rec
+        return rec
+
+    def get(self, asset: str, partition: str) -> Any:
+        with self._lock:
+            rec = self._mem.get(self._key(asset, partition))
+        if rec is None:
+            raise KeyError(f"no materialization for {asset}[{partition}]")
+        if "value" in rec:
+            return rec["value"]
+        with open(rec["path"], "rb") as f:
+            return pickle.load(f)
+
+    def record(self, asset: str, partition: str) -> dict | None:
+        with self._lock:
+            return self._mem.get(self._key(asset, partition))
+
+    def is_fresh(self, asset: str, partition: str, fingerprint: str) -> bool:
+        rec = self.record(asset, partition)
+        return rec is not None and rec["fingerprint"] == fingerprint

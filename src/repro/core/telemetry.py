@@ -1,0 +1,89 @@
+"""Message Reader: structured telemetry capture (paper component #2).
+
+Every run emits events (submit / start / heartbeat / materialize / finish /
+fail / cancel / cost-report / scaling).  The reader aggregates them for the
+monitoring benchmarks (Fig 3 run-state counts, Fig 6 duration distributions)
+and powers straggler detection in the coordinator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import threading
+import time
+from typing import Any, Iterable
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    ts: float
+    run_id: str
+    asset: str
+    partition: str
+    platform: str
+    kind: str  # SUBMIT|START|HEARTBEAT|MATERIALIZE|SUCCESS|FAILURE|CANCEL|COST|SCALING|RETRY|FAILOVER|SPECULATE
+    payload: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class MessageReader:
+    def __init__(self) -> None:
+        self._events: list[Event] = []
+        self._lock = threading.Lock()
+
+    def emit(self, run_id: str, asset: str, partition: str, platform: str,
+             kind: str, **payload: Any) -> Event:
+        ev = Event(time.time(), run_id, asset, partition, platform, kind,
+                   dict(payload))
+        with self._lock:
+            self._events.append(ev)
+        return ev
+
+    def events(self, kind: str | None = None, asset: str | None = None,
+               platform: str | None = None) -> list[Event]:
+        with self._lock:
+            evs = list(self._events)
+        if kind is not None:
+            evs = [e for e in evs if e.kind == kind]
+        if asset is not None:
+            evs = [e for e in evs if e.asset == asset]
+        if platform is not None:
+            evs = [e for e in evs if e.platform == platform]
+        return evs
+
+    # ------------------------------------------------------------ aggregates
+    def outcome_counts(self) -> dict[str, dict[str, int]]:
+        """platform -> {success, failure, cancelled} — Fig 3."""
+        out: dict[str, dict[str, int]] = {}
+        for e in self.events():
+            if e.kind in ("SUCCESS", "FAILURE", "CANCEL"):
+                d = out.setdefault(e.platform, {"success": 0, "failure": 0,
+                                                "cancelled": 0})
+                key = {"SUCCESS": "success", "FAILURE": "failure",
+                       "CANCEL": "cancelled"}[e.kind]
+                d[key] += 1
+        return out
+
+    def durations(self, asset: str | None = None,
+                  platform: str | None = None) -> list[float]:
+        return [e.payload["duration_s"]
+                for e in self.events(kind="SUCCESS", asset=asset,
+                                     platform=platform)
+                if "duration_s" in e.payload]
+
+    def median_duration(self, asset: str) -> float | None:
+        d = self.durations(asset=asset)
+        return statistics.median(d) if d else None
+
+    def total_cost(self, platform: str | None = None) -> float:
+        return sum(e.payload.get("total_usd", 0.0)
+                   for e in self.events(kind="COST", platform=platform))
+
+    def cost_by_asset(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for e in self.events(kind="COST"):
+            out[e.asset] = out.get(e.asset, 0.0) + e.payload.get("total_usd", 0.0)
+        return out
+
+    def tail(self, n: int = 20) -> Iterable[Event]:
+        with self._lock:
+            return list(self._events[-n:])

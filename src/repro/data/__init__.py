@@ -1,0 +1,2 @@
+from repro.data.synthetic import TokenDataset  # noqa: F401
+from repro.data import commoncrawl  # noqa: F401

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (  # noqa: F401
+    MeshInfo,
+    constrain,
+    current_mesh_info,
+    logical_spec,
+    param_shardings,
+    set_mesh_info,
+    use_mesh_info,
+)

@@ -1,0 +1,181 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) over the production mesh.
+
+Every tensor dim in the model is annotated with a *logical* axis name; this
+module maps logical names -> mesh axes, with automatic fallback when a dim is
+not divisible by the mesh axis size (e.g. kv_heads=8 on a 16-way model axis).
+
+The mapping is carried in a context (``MeshInfo``) so the same model code runs
+(a) un-sharded on a single CPU device in unit tests, (b) on a 16x16 single-pod
+mesh, and (c) on the 2x16x16 multi-pod mesh, with no code changes.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis -> preferred mesh axes (in order; each mesh axis used at most
+# once per tensor).  "batch" spreads over the pure-DP axes (pod + data);
+# "*_fsdp" are ZeRO-3 weight shards over the data axis; "heads"/"mlp"/"vocab"/
+# "experts" are tensor/expert parallel over the model axis; "seq_act" is
+# Megatron-style sequence parallelism for the residual stream; "kv_seq" shards
+# long KV caches / decode-time sequence over the model axis (SP-decode).
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "batch_data_only": ("data",),
+    "seq_act": ("model",),
+    "kv_seq": ("model",),
+    "embed_fsdp": ("data",),
+    "ff_fsdp": ("data",),
+    "vocab_fsdp": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_ff_fsdp": ("data",),
+    "lru_width": ("model",),
+    "rwkv_heads": ("model",),
+    "layers": (),
+    "head_dim": (),
+    "qk_dim": (),
+    "v_dim": (),
+    "lora": (),
+    "window": (),
+    "conv": (),
+    "state": (),
+    "stats": (),
+    None: (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    """A mesh plus the logical->physical rules active for this run."""
+
+    mesh: Mesh
+    rules: Mapping[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+
+    @property
+    def axis_sizes(self) -> dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def axis_size(self, name: str) -> int:
+        return self.axis_sizes.get(name, 1)
+
+    def mesh_axes_for(self, logical: str | None, dim_size: int) -> tuple[str, ...]:
+        """Resolve a logical axis to mesh axes, dropping axes that don't divide
+        ``dim_size`` or don't exist in this mesh (divisibility fallback)."""
+        axes: list[str] = []
+        prod = 1
+        for ax in self.rules.get(logical, ()):  # type: ignore[arg-type]
+            size = self.axis_sizes.get(ax)
+            if size is None or size <= 1:
+                continue
+            if dim_size % (prod * size) != 0:
+                continue
+            axes.append(ax)
+            prod *= size
+        return tuple(axes)
+
+    def spec(self, shape: Sequence[int], axes: Sequence[str | None]) -> P:
+        """PartitionSpec for a tensor with the given shape + logical axes.
+        A mesh axis is only used once per tensor (first dim wins)."""
+        assert len(shape) == len(axes), (shape, axes)
+        used: set[str] = set()
+        entries: list[Any] = []
+        for dim, logical in zip(shape, axes):
+            resolved = [a for a in self.mesh_axes_for(logical, dim) if a not in used]
+            # re-check divisibility after dropping already-used axes
+            prod = 1
+            keep: list[str] = []
+            for a in resolved:
+                size = self.axis_sizes[a]
+                if dim % (prod * size) == 0:
+                    keep.append(a)
+                    prod *= size
+            used.update(keep)
+            if not keep:
+                entries.append(None)
+            elif len(keep) == 1:
+                entries.append(keep[0])
+            else:
+                entries.append(tuple(keep))
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, shape: Sequence[int], axes: Sequence[str | None]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+
+class _MeshState(threading.local):
+    def __init__(self) -> None:
+        self.info: MeshInfo | None = None
+
+
+_STATE = _MeshState()
+
+
+def set_mesh_info(info: MeshInfo | None) -> None:
+    _STATE.info = info
+
+
+def current_mesh_info() -> MeshInfo | None:
+    return _STATE.info
+
+
+@contextlib.contextmanager
+def use_mesh_info(info: MeshInfo | None):
+    prev = _STATE.info
+    _STATE.info = info
+    try:
+        yield info
+    finally:
+        _STATE.info = prev
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Apply with_sharding_constraint using logical axis names.
+
+    No-op when no mesh is active (single-device tests) — the same model code
+    is thereby portable between unit tests and pod-scale dry runs.
+    """
+    info = _STATE.info
+    if info is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, info.sharding(x.shape, axes))
+
+
+def logical_spec(shape: Sequence[int], axes: Sequence[str | None]) -> P:
+    info = _STATE.info
+    if info is None:
+        return P()
+    return info.spec(shape, axes)
+
+
+def param_shardings(axes_tree: Any, shape_tree: Any, info: MeshInfo) -> Any:
+    """Build a NamedSharding tree from an axes tree + matching shape tree."""
+    return jax.tree.map(
+        lambda axes, shaped: info.sharding(shaped.shape, axes),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def shard_map_specs(info: MeshInfo | None):
+    """Convenience: (data_axes, model_axis) names present in the active mesh,
+    for the explicit shard_map MoE path."""
+    if info is None:
+        return (), None
+    names = info.mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    model_axis = "model" if "model" in names else None
+    return data_axes, model_axis

@@ -1,0 +1,140 @@
+"""Flash attention for TPU: fused streaming-softmax with BlockSpec VMEM tiling.
+
+Adaptation notes (DESIGN.md §6): FlashAttention's GPU formulation (warps,
+shared-memory tiles) is re-expressed for the TPU memory hierarchy — HBM ->
+VMEM block copies driven by ``pl.BlockSpec`` index maps, (block_q x block_k)
+score tiles shaped for the 128x128 MXU, and the online max/denominator carry
+kept in VMEM scratch across the sequential kv grid dimension.  Causal and
+sliding-window blocks that are fully masked are skipped via ``pl.when``
+(the TPU grid is sequential in the innermost dimension, so the skip saves
+real MXU cycles rather than relying on SM occupancy).
+
+Supports GQA/MQA directly: kv blocks are indexed by q_head // group_size.
+Positions are contiguous (pos_q = q_offset + iota, pos_k = iota) — the
+train/prefill regime; decode uses the XLA path (attention.py), where the
+work per step is tiny.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int, q_offset: int,
+                  block_q: int, block_k: int, n_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = q_offset + iq * block_q
+    k_start = ik * block_k
+
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        if causal or window > 0:
+            pos_q = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            pos_k = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            mask = jnp.ones_like(s, dtype=jnp.bool_)
+            if causal:
+                mask &= pos_k <= pos_q
+            if window > 0:
+                mask &= (pos_q - pos_k) < window
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    if causal or window > 0:
+        # Block-level skip: entirely-future (causal) or stale (window) tiles.
+        should = jnp.bool_(True)
+        if causal:
+            should &= q_start + block_q - 1 >= k_start
+        if window > 0:
+            should &= q_start - (k_start + block_k - 1) < window
+        pl.when(should)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (
+        "pad sequence to block multiples before calling the kernel")
+    nq, nk = Sq // block_q, Skv // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, block_q=block_q, block_k=block_k, n_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, Dv), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, Dv), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),  # row-max, lane-broadcast
+            pltpu.VMEM((block_q, 128), jnp.float32),  # row-sum, lane-broadcast
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,106 @@
+"""Chunked gated-linear-recurrence kernel (RWKV-6 WKV) for TPU.
+
+The GPU formulations (RWKV CUDA, GLA fused chunk) rely on warp-level
+parallelism over heads; the TPU-native shape is: one (batch, head) per
+parallel grid cell, the chunk dimension sequential ("arbitrary"), the
+running (N x N) state held in VMEM scratch across chunks, and the intra-chunk
+part expressed as (C x C) tiles that feed the MXU.  Stability: all decay
+algebra happens in log space; every exp() argument is <= 0 by construction.
+
+  y_t = r_t . (S_{t-1} + (u*k_t) v_t^T);   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, s_out_ref,
+                s_scr, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)  # (C, N)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)  # (N,)
+    S = s_scr[...]
+
+    p = jnp.cumsum(lw, axis=0)  # inclusive log-decay, <= 0
+    p_prev = p - lw  # exclusive (through t-1)
+
+    y_inter = jax.lax.dot_general(r * jnp.exp(p_prev), S,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # intra-chunk attention-like tile: A[t,s] = sum_n r[t,n] k[s,n] e^{p_prev[t,n]-p[s,n]}
+    diff = p_prev[:, None, :] - p[None, :, :]  # (C, C, N), masked to s<t
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) \
+        > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    d = jnp.where(tri[:, :, None], jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    a = jnp.sum(r[:, None, :] * k[None, :, :] * d, axis=-1)  # (C, C)
+    y_intra = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1)  # (C,)
+    y = y_inter + y_intra + bonus[:, None] * v
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    k_hat = k * jnp.exp(p[-1:, :] - p)
+    s_new = (jnp.exp(p[-1])[:, None] * S
+             + jax.lax.dot_general(k_hat, v, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    s_scr[...] = s_new
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        s_out_ref[0, 0] = s_new.astype(s_out_ref.dtype)
+
+
+def linear_scan(
+    r: jax.Array,  # (B, S, H, N) f32
+    k: jax.Array,
+    v: jax.Array,
+    log_w: jax.Array,  # (B, S, H, N) f32, <= 0
+    u: jax.Array,  # (H, N)
+    s0: jax.Array,  # (B, H, N, N) f32
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, S, H, N = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    nc = S // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=nc)
+    seq_spec = pl.BlockSpec((1, chunk, 1, N), lambda b, h, ic: (b, ic, h, 0))
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, N), lambda b, h, ic: (h, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, N, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, N), r.dtype),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(r, k, v, log_w, u, s0)
+    return y, s_fin

@@ -1,0 +1,42 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; on CPU (this container) the same
+kernel bodies execute in ``interpret=True`` mode for correctness work, and
+model code falls back to the XLA reference path for anything
+performance-shaped (the dry-run lowers the XLA path; see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import linear_scan as _ls
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "q_offset", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    q_offset=0, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, q_offset=q_offset,
+                               interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def linear_scan(r, k, v, log_w, u, s0, *, chunk=64, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _ls.linear_scan(r, k, v, log_w, u, s0, chunk=chunk,
+                           interpret=interp)
+
+
+# re-exported oracles
+attention_ref = _ref.attention_ref
+wkv_ref = _ref.wkv_ref

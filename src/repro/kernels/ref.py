@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (small shapes; full materialization)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: float | None = None, q_offset: int = 0) -> jax.Array:
+    """q: (B,Sq,Hq,D); k/v: (B,Skv,Hkv,D).  Positions are contiguous:
+    pos_q = q_offset + arange(Sq), pos_k = arange(Skv)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    pos_q = q_offset + jnp.arange(Sq)
+    pos_k = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= pos_k[None, :] <= pos_q[:, None]
+    if window > 0:
+        mask &= (pos_q[:, None] - pos_k[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def wkv_ref(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+            u: jax.Array, s0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 recurrence oracle.  All (B,S,H,N) f32; u (H,N); s0 (B,H,N,N).
+
+    y_t = r_t . (S_{t-1} + (u*k_t) v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(S, inp):
+        rt, kt, vt, lwt = inp
+        y = (jnp.einsum("bhn,bhnm->bhm", rt, S)
+             + jnp.einsum("bhn,hn,bhn->bh", rt, u, kt)[..., None] * vt)
+        S_new = jnp.exp(lwt)[..., None] * S + kt[..., None] * vt[:, :, None, :]
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, log_w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin

@@ -1,0 +1,255 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract memory/cost/collective analysis (assignment §e/§g).
+
+MUST set XLA_FLAGS before any other import — jax locks the device count on
+first backend init.  Do NOT set this globally: smoke tests and benches see
+one device.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_configs  # noqa: E402
+from repro.configs.base import ModelConfig, ShapeSpec  # noqa: E402
+from repro.distributed.sharding import MeshInfo, use_mesh_info  # noqa: E402
+from repro.launch import analysis, flops as flops_mod  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (batch_specs, cache_input_specs,  # noqa: E402
+                                decode_token_specs, param_specs)
+from repro.models import LanguageModel  # noqa: E402
+from repro.optim import AdamW, OptConfig  # noqa: E402
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Assignment formula: 6*N*D train (N_active for MoE); 2*N*D inference."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    if cfg.n_experts == 0:
+        return cfg.param_count()
+    n_moe_layers = sum(
+        1 for i, t in enumerate(cfg.layer_types())
+        if cfg.n_experts > 0 and i >= cfg.first_dense_layers
+        and t in ("attn", "swa"))
+    routed = cfg.n_experts * 3 * cfg.d_model * cfg.d_ff_expert
+    active = cfg.top_k * 3 * cfg.d_model * cfg.d_ff_expert
+    return cfg.param_count() - n_moe_layers * (routed - active)
+
+
+def make_train_step(model: LanguageModel, opt: AdamW, param_shardings=None):
+    def train_step(params, opt_state, batch):
+        grad_fn = jax.value_and_grad(model.train_loss, has_aux=True)
+        (_, metrics), grads = grad_fn(params, batch)
+        if param_shardings is not None:
+            # pin gradient shardings to the FSDP layout so XLA lowers the
+            # data-axis reduction as reduce-scatter, not full all-reduce
+            # (EXPERIMENTS.md §Perf iteration 2)
+            grads = jax.lax.with_sharding_constraint(grads, param_shardings)
+        new_params, new_state, stats = opt.update(grads, opt_state, params)
+        return new_params, new_state, {**metrics, **stats}
+
+    return train_step
+
+
+def shardings_of(tree):
+    return jax.tree.map(lambda s: s.sharding, tree)
+
+
+def build_lowered(cfg: ModelConfig, shape: ShapeSpec, info: MeshInfo):
+    """Returns (lowered, n_args_tree) for the right step fn of the cell."""
+    if shape.kind == "train":
+        model = LanguageModel(cfg)
+        opt = AdamW(OptConfig())
+        psds = param_specs(model, info)
+        osds = _opt_specs(model, opt, info, psds)
+        bsds = batch_specs(cfg, shape, info)
+        fn = jax.jit(
+            make_train_step(model, opt, shardings_of(psds)),
+            out_shardings=(shardings_of(psds), shardings_of(osds), None),
+            donate_argnums=(0, 1),
+        )
+        return fn.lower(psds, osds, bsds), (psds, osds, bsds)
+
+    # serving cells carry bf16 weights (no optimizer states)
+    serve_cfg = cfg.scaled(param_dtype="bfloat16")
+    model = LanguageModel(serve_cfg)
+    psds = param_specs(model, info)
+    csds = cache_input_specs(model, shape, info)
+    if shape.kind == "prefill":
+        bsds = batch_specs(serve_cfg, shape, info)
+        fn = jax.jit(model.prefill, donate_argnums=(2,))
+        return fn.lower(psds, bsds, csds), (psds, bsds, csds)
+
+    tsds, possds = decode_token_specs(serve_cfg, shape, info)
+    fn = jax.jit(model.decode_step, donate_argnums=(2,),
+                 out_shardings=(None, shardings_of(csds)))
+    return fn.lower(psds, tsds, csds, possds), (psds, tsds, csds, possds)
+
+
+def _opt_specs(model, opt, info, psds):
+    shapes = jax.eval_shape(opt.init, model.abstract_params())
+    axes = model.param_axes
+
+    def attach(sds, ax):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=info.sharding(sds.shape, ax))
+
+    out = {
+        "m": jax.tree.map(attach, shapes["m"], axes,
+                          is_leaf=lambda x: isinstance(x, tuple)
+                          and all(isinstance(e, (str, type(None))) for e in x)),
+        "v": jax.tree.map(attach, shapes["v"], axes,
+                          is_leaf=lambda x: isinstance(x, tuple)
+                          and all(isinstance(e, (str, type(None))) for e in x)),
+        "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                     sharding=info.sharding((), ())),
+    }
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": shape.kind}
+
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        cell["status"] = "skipped"
+        cell["reason"] = "full-attention arch: long_500k skipped per assignment"
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = MeshInfo(mesh)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        with use_mesh_info(info), mesh:
+            lowered, _args = build_lowered(cfg, shape, info)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = analysis.safe_memory_analysis(compiled)
+            print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis:",
+                  {k: f"{v/2**30:.2f}GiB" for k, v in mem.items()
+                   if "bytes" in k})
+            ca = analysis.safe_cost_analysis(compiled)
+            print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis: "
+                  f"flops={ca.get('flops', 0):.3e} "
+                  f"bytes={ca.get('bytes accessed', 0):.3e}")
+            hlo = compiled.as_text()
+            coll = analysis.collective_bytes(hlo)
+
+        mf = model_flops(cfg, shape)
+        # analytic compute/memory terms: XLA cost analysis counts while-loop
+        # (scan) bodies once, so HLO-reported flops/bytes under-count by
+        # ~n_layers x; the collective term comes from the compiled HLO with
+        # trip-count scaling (see launch/flops.py + analysis.py docstrings).
+        tp = 16  # model-axis size on both assigned meshes
+        step_cfg = cfg if shape.kind == "train" else \
+            cfg.scaled(param_dtype="bfloat16")
+        hlo_flops = flops_mod.step_flops(step_cfg, shape) / n_chips
+        hbm_bytes = flops_mod.step_hbm_bytes(step_cfg, shape, n_chips, tp)
+        roof = analysis.roofline(
+            flops_per_device=hlo_flops,
+            hbm_bytes_per_device=hbm_bytes,
+            coll_bytes_per_device=coll["total"],
+            model_flops_total=mf,
+            n_chips=n_chips,
+        )
+        cell.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory_analysis": mem,
+            "cost_analysis_raw": {k: v for k, v in ca.items()
+                                  if not k.startswith("_")},
+            "analytic_flops_per_device": hlo_flops,
+            "analytic_hbm_bytes_per_device": hbm_bytes,
+            "collective_bytes": {k: v for k, v in coll.items()
+                                 if k != "op_counts"},
+            "collective_ops": coll["op_counts"],
+            "model_flops": mf,
+            "params_total": cfg.param_count(),
+            "params_active": active_param_count(cfg),
+            "roofline": roof,
+        })
+        if keep_hlo:
+            cell["hlo_len"] = len(hlo)
+    except Exception as e:
+        cell["status"] = "error"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-4000:]
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in list_configs():
+            cfg = get_config(a)
+            print(a, [s.name for s in applicable_shapes(cfg)])
+        return
+
+    archs = [args.arch] if args.arch else list_configs()
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        # iterate ALL shapes: run_cell records inapplicable cells as explicit
+        # 'skipped' rows (the 40-cell accounting in §Roofline)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                out_path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                cell = run_cell(arch, shape_name, mp)
+                with open(out_path, "w") as f:
+                    json.dump(cell, f, indent=1)
+                status = cell["status"]
+                extra = ""
+                if status == "ok":
+                    r = cell["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" step={r['step_time_s']:.4f}s"
+                             f" compile={cell['compile_s']:.1f}s")
+                elif status == "error":
+                    failures += 1
+                    extra = " " + cell["error"][:200]
+                print(f"DRYRUN {arch} x {shape_name} x {mesh_name}: "
+                      f"{status}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, per
+(architecture x assigned shape), with NamedShardings attached — weak-type
+correct, shardable, zero device allocation (the dry-run contract).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import MeshInfo
+from repro.models import LanguageModel
+from repro.models.model import _is_spec_leaf
+
+
+def _sds(info: MeshInfo | None, shape, dtype, axes) -> jax.ShapeDtypeStruct:
+    if info is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=info.sharding(shape, axes))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec,
+                info: MeshInfo | None) -> dict[str, Any]:
+    """Training/prefill batch inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {
+        "tokens": _sds(info, (b, s), jnp.int32, ("batch", "seq_act")),
+    }
+    if shape.kind == "train":
+        specs["targets"] = _sds(info, (b, s), jnp.int32, ("batch", "seq_act"))
+        specs["weights"] = _sds(info, (b, s), jnp.float32, ("batch", "seq_act"))
+    if cfg.enc_dec:  # audio frontend STUB: precomputed frame embeddings
+        specs["frames"] = _sds(info, (b, s, cfg.d_model), jnp.float32,
+                               ("batch", "seq_act", None))
+    if cfg.pos_type == "mrope":  # vision frontend STUB: M-RoPE coordinates
+        specs["positions"] = _sds(info, (3, b, s), jnp.int32,
+                                  (None, "batch", "seq_act"))
+    return specs
+
+
+def cache_input_specs(model: LanguageModel, shape: ShapeSpec,
+                      info: MeshInfo | None, dtype=jnp.bfloat16) -> Any:
+    cfg = model.cfg
+    specs = model.cache_specs(shape.global_batch, shape.seq_len,
+                              enc_len=shape.seq_len, dtype=dtype)
+
+    def attach(leaf):
+        sds, axes = leaf
+        return _sds(info, sds.shape, sds.dtype, axes)
+
+    return jax.tree.map(attach, specs, is_leaf=_is_spec_leaf)
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeSpec,
+                       info: MeshInfo | None) -> tuple[Any, Any]:
+    b = shape.global_batch
+    tokens = _sds(info, (b, 1), jnp.int32, ("batch", None))
+    pos = _sds(info, (b,), jnp.int32, ("batch",))
+    return tokens, pos
+
+
+def param_specs(model: LanguageModel, info: MeshInfo | None,
+                dtype: str | None = None) -> Any:
+    """Abstract parameters with shardings (no allocation)."""
+    shapes = model.abstract_params()
+    axes = model.param_axes
+
+    def attach(sds, ax):
+        dt = sds.dtype if dtype is None else jnp.dtype(dtype)
+        # norms/scalars stay f32 even when serving weights are bf16
+        if dtype is not None and sds.ndim <= 1:
+            dt = sds.dtype
+        return _sds(info, sds.shape, dt, ax)
+
+    return jax.tree.map(attach, shapes, axes,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,354 @@
+"""Recurrent blocks: RG-LRU (Griffin [arXiv:2402.19427]) and RWKV-6 (Finch
+[arXiv:2404.05892]).
+
+Both have three numerically-consistent forms (parity-tested):
+  * naive per-step scan (the oracle, also the decode path),
+  * a parallel form for train/prefill — associative scan for RG-LRU, a
+    chunked-parallel form for RWKV-6 (intra-chunk attention-like einsum in
+    log-decay space + inter-chunk state carry),
+  * the Pallas chunked kernel (kernels/linear_scan.py) targeting TPU.
+
+Feature dims (lru_width / rwkv heads) are elementwise in the recurrence, so
+tensor parallelism shards them over the model axis with zero collectives —
+the TPU-native answer to "how do SSM layers scale" (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import Param, dense_init
+
+RG_LRU_C = 8.0  # Griffin's fixed gate exponent
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = exp(-c*softplus(lam)) ~ U[0.9, 0.999]  (Griffin A.2)
+    a0 = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(a0) / RG_LRU_C))
+    return {
+        "w_y": Param(dense_init(ks[0], (d, w), 1, dt), ("embed_fsdp", "lru_width")),
+        "w_x": Param(dense_init(ks[1], (d, w), 1, dt), ("embed_fsdp", "lru_width")),
+        "conv_w": Param(jnp.zeros((cfg.conv_width, w), dt), (None, "lru_width")),
+        "conv_b": Param(jnp.zeros((w,), dt), ("lru_width",)),
+        "w_a": Param(dense_init(ks[2], (w, w), 1, dt), ("lru_width", "lru_width")),
+        "b_a": Param(jnp.zeros((w,), dt), ("lru_width",)),
+        "w_i": Param(dense_init(ks[3], (w, w), 1, dt), ("lru_width", "lru_width")),
+        "b_i": Param(jnp.zeros((w,), dt), ("lru_width",)),
+        "lam": Param(lam.astype(jnp.float32), ("lru_width",)),
+        "w_o": Param(dense_init(ks[4], (w, d), 1, dt), ("lru_width", "embed_fsdp")),
+    }
+
+
+def make_rglru_state(batch: int, cfg: ModelConfig) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+def rglru_state_specs(batch: int, cfg: ModelConfig) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": (jax.ShapeDtypeStruct((batch, w), jnp.float32),
+              ("batch", "lru_width")),
+        "conv": (jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, w), jnp.float32),
+                 ("batch", None, "lru_width")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds (width is tiny)."""
+    cw = w.shape[0]
+    out = u * w[-1]
+    for i in range(1, cw):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _rg_gates(p: dict, cfg: ModelConfig, u: jax.Array):
+    f32 = jnp.float32
+    r = jax.nn.sigmoid((u @ p["w_a"].astype(u.dtype)).astype(f32)
+                       + p["b_a"].astype(f32))
+    i = jax.nn.sigmoid((u @ p["w_i"].astype(u.dtype)).astype(f32)
+                       + p["b_i"].astype(f32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"].astype(f32)) * r
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gated = u.astype(f32) * i * mult
+    return log_a, gated
+
+
+def apply_rglru(p: dict, cfg: ModelConfig, x: jax.Array, state: dict | None,
+                mode: str) -> tuple[jax.Array, dict | None]:
+    cdt = cfg.compute_dtype
+    y_gate = jax.nn.gelu(x @ p["w_y"].astype(cdt), approximate=True)
+    u_pre = x @ p["w_x"].astype(cdt)
+    u_pre = constrain(u_pre, "batch", None, "lru_width")
+
+    if mode == "decode":
+        assert state is not None
+        conv_cache = state["conv"]  # (B, cw-1, w) holds u_{t-cw+1..t-1}
+        w_c = p["conv_w"].astype(jnp.float32)
+        u = (u_pre[:, 0].astype(jnp.float32) * w_c[-1]
+             + jnp.einsum("bcw,cw->bw", conv_cache, w_c[:-1])
+             + p["conv_b"].astype(jnp.float32))
+        log_a, gated = _rg_gates(p, cfg, u[:, None, :].astype(cdt))
+        a = jnp.exp(log_a[:, 0])
+        h = a * state["h"] + gated[:, 0]
+        new_state = {
+            "h": h,
+            "conv": jnp.concatenate(
+                [conv_cache[:, 1:], u_pre.astype(jnp.float32)], axis=1),
+        }
+        out = (y_gate * h[:, None, :].astype(cdt)) @ p["w_o"].astype(cdt)
+        return constrain(out, "batch", None, "embed_fsdp"), new_state
+
+    u = _causal_conv(u_pre.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+                     p["conv_b"].astype(jnp.float32)).astype(cdt)
+    log_a, gated = _rg_gates(p, cfg, u)
+    a = jnp.exp(log_a)
+
+    def binop(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, h = jax.lax.associative_scan(binop, (a, gated), axis=1)
+    if state is not None and mode == "prefill_continue":
+        h = h + a_cum * state["h"][:, None, :]
+
+    new_state = None
+    if mode == "prefill":
+        new_state = {
+            "h": h[:, -1],
+            "conv": u_pre[:, -(cfg.conv_width - 1):].astype(jnp.float32),
+        }
+    out = (y_gate * h.astype(cdt)) @ p["w_o"].astype(cdt)
+    return constrain(out, "batch", None, "embed_fsdp"), new_state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+_N_MIX = 5  # w, k, v, r, g ddlerp streams
+
+
+def init_rwkv_time_mix(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_size
+    n = cfg.rwkv_head_size
+    lm, ld = cfg.rwkv_mix_lora, cfg.rwkv_decay_lora
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 10)
+    ramp = jnp.linspace(0.0, 1.0, d, dtype=jnp.float32)
+    # decay base: -6 .. -1 ramp => per-channel half-lives spanning decades
+    w0 = -6.0 + 5.0 * ramp ** 1.3
+    return {
+        "mu_x": Param(0.5 * jnp.ones((d,), dt), (None,)),
+        "mu": Param(0.5 * jnp.ones((_N_MIX, d), dt), (None, None)),
+        "mix_A": Param(dense_init(ks[0], (d, _N_MIX, lm), 1, dt),
+                       ("embed_fsdp", None, "lora")),
+        "mix_B": Param(dense_init(ks[1], (_N_MIX, lm, d), 2, dt),
+                       (None, "lora", None)),
+        "w0": Param(w0.astype(jnp.float32), (None,)),
+        "decay_A": Param(dense_init(ks[2], (d, ld), 1, dt), ("embed_fsdp", "lora")),
+        "decay_B": Param(dense_init(ks[3], (ld, d), 1, dt), ("lora", None)),
+        "u": Param((jax.random.normal(ks[4], (h, n), jnp.float32) * 0.1).astype(dt),
+                   ("rwkv_heads", None)),
+        "w_r": Param(dense_init(ks[5], (d, d), 1, dt), ("embed_fsdp", "mlp")),
+        "w_k": Param(dense_init(ks[6], (d, d), 1, dt), ("embed_fsdp", "mlp")),
+        "w_v": Param(dense_init(ks[7], (d, d), 1, dt), ("embed_fsdp", "mlp")),
+        "w_g": Param(dense_init(ks[8], (d, d), 1, dt), ("embed_fsdp", "mlp")),
+        "ln_w": Param(jnp.ones((d,), dt), (None,)),
+        "ln_b": Param(jnp.zeros((d,), dt), (None,)),
+        "w_o": Param(dense_init(ks[9], (d, d), 1, dt), ("mlp", "embed_fsdp")),
+    }
+
+
+def init_rwkv_channel_mix(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": Param(0.5 * jnp.ones((d,), dt), (None,)),
+        "mu_r": Param(0.5 * jnp.ones((d,), dt), (None,)),
+        "w_k": Param(dense_init(ks[0], (d, ff), 1, dt), ("embed_fsdp", "mlp")),
+        "w_v": Param(dense_init(ks[1], (ff, d), 1, dt), ("mlp", "embed_fsdp")),
+        "w_r": Param(dense_init(ks[2], (d, d), 1, dt), ("embed_fsdp", "mlp")),
+    }
+
+
+def make_rwkv_state(batch: int, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, n = d // cfg.rwkv_head_size, cfg.rwkv_head_size
+    return {
+        "S": jnp.zeros((batch, h, n, n), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), jnp.float32),
+        "x_cm": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def rwkv_state_specs(batch: int, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, n = d // cfg.rwkv_head_size, cfg.rwkv_head_size
+    return {
+        "S": (jax.ShapeDtypeStruct((batch, h, n, n), jnp.float32),
+              ("batch", "rwkv_heads", None, None)),
+        "x_tm": (jax.ShapeDtypeStruct((batch, d), jnp.float32), ("batch", None)),
+        "x_cm": (jax.ShapeDtypeStruct((batch, d), jnp.float32), ("batch", None)),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """xx_t = x_{t-1}; token 0 sees `prev` (decode state) or zeros."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: dict, x: jax.Array, xx: jax.Array):
+    """Finch data-dependent token-shift mixes for the 5 streams."""
+    dx = xx - x
+    z = x + dx * p["mu_x"].astype(x.dtype)
+    za = jnp.tanh(jnp.einsum("bsd,dkl->bskl", z, p["mix_A"].astype(x.dtype)))
+    mixes = (p["mu"].astype(x.dtype)
+             + jnp.einsum("bskl,kld->bskd", za, p["mix_B"].astype(x.dtype)))
+    return tuple(x + dx * mixes[:, :, i] for i in range(_N_MIX))  # w,k,v,r,g
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+                u: jax.Array, s0: jax.Array, chunk: int = 64):
+    """Chunked-parallel WKV6.  All (B,S,H,N) in f32; s0 (B,H,N,N).
+
+    y_t = r_t . (S_{t-1} + (u*k_t) v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    B, S, H, N = r.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    rs, ks_, vs, ws = (jnp.moveaxis(a.reshape(B, nc, c, H, N), 1, 0)
+                       for a in (r, k, v, log_w))
+
+    def step(S_, inp):
+        rc, kc, vc, lwc = inp  # (B, c, H, N)
+        p = jnp.cumsum(lwc, axis=1)  # inclusive log-decay
+        p_prev = p - lwc  # exclusive (through t-1)
+        y_inter = jnp.einsum("blhn,bhnm->blhm", rc * jnp.exp(p_prev), S_)
+        # intra-chunk: A[t,s] = sum_n r_t[n] k_s[n] exp(p_prev[t,n] - p[s,n]), s<t
+        diff = p_prev[:, :, None] - p[:, None, :]  # (B, c, c, H, N)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)[None, :, :, None, None]
+        D = jnp.where(tri, jnp.exp(diff), 0.0)
+        A = jnp.einsum("blhn,bmhn,blmhn->blmh", rc, kc, D)
+        y_intra = jnp.einsum("blmh,bmhn->blhn", A, vc)
+        bonus = jnp.einsum("blhn,hn,blhn->blh", rc, u, kc)
+        y = y_inter + y_intra + bonus[..., None] * vc
+        k_hat = kc * jnp.exp(p[:, -1:, :] - p)
+        S_new = (jnp.exp(p[:, -1])[..., None] * S_
+                 + jnp.einsum("blhn,blhm->bhnm", k_hat, vc))
+        return S_new, y
+
+    s_fin, ys = jax.lax.scan(step, s0, (rs, ks_, vs, ws))
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, H, N), s_fin
+
+
+def wkv_recurrent(r, k, v, log_w, u, s0):
+    """Naive per-step oracle (and the decode step when S==1)."""
+    def step(S_, inp):
+        rt, kt, vt, lwt = inp  # (B, H, N)
+        y = (jnp.einsum("bhn,bhnm->bhm", rt, S_)
+             + jnp.einsum("bhn,hn,bhn->bh", rt, u, kt)[..., None] * vt)
+        S_new = jnp.exp(lwt)[..., None] * S_ + kt[..., None] * vt[:, :, None, :]
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, log_w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def _group_norm(y: jax.Array, w: jax.Array, b: jax.Array, n: int,
+                eps: float = 1e-5) -> jax.Array:
+    B, S, d = y.shape
+    yh = y.reshape(B, S, d // n, n).astype(jnp.float32)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, d) * w.astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(y.dtype)
+
+
+def apply_rwkv_time_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+                        state: dict | None, mode: str,
+                        use_kernel: bool = False):
+    cdt = cfg.compute_dtype
+    B, S, d = x.shape
+    h, n = d // cfg.rwkv_head_size, cfg.rwkv_head_size
+
+    prev = state["x_tm"] if (state is not None and mode == "decode") else None
+    xx = _shift(x, prev)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xx)
+
+    r = (xr @ p["w_r"].astype(cdt)).reshape(B, S, h, n)
+    k = (xk @ p["w_k"].astype(cdt)).reshape(B, S, h, n)
+    v = (xv @ p["w_v"].astype(cdt)).reshape(B, S, h, n)
+    g = xg @ p["w_g"].astype(cdt)
+    w_raw = (p["w0"].astype(jnp.float32)
+             + jnp.tanh(xw @ p["decay_A"].astype(cdt)).astype(jnp.float32)
+             @ p["decay_B"].astype(jnp.float32))
+    log_w = -jnp.exp(w_raw).reshape(B, S, h, n)
+
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    r32 = constrain(r32, "batch", None, "rwkv_heads", None)
+    k32 = constrain(k32, "batch", None, "rwkv_heads", None)
+    v32 = constrain(v32, "batch", None, "rwkv_heads", None)
+    log_w = constrain(log_w, "batch", None, "rwkv_heads", None)
+    u = p["u"].astype(jnp.float32)
+    s0 = (state["S"] if state is not None
+          else jnp.zeros((B, h, n, n), jnp.float32))
+
+    if mode == "decode":
+        y, s_fin = wkv_recurrent(r32, k32, v32, log_w, u, s0)
+    elif use_kernel:
+        from repro.kernels import ops as kops
+        y, s_fin = kops.linear_scan(r32, k32, v32, log_w, u, s0)
+    else:
+        y, s_fin = wkv_chunked(r32, k32, v32, log_w, u, s0)
+
+    y = _group_norm(y.reshape(B, S, d).astype(cdt), p["ln_w"], p["ln_b"], n)
+    out = (y * jax.nn.silu(g)) @ p["w_o"].astype(cdt)
+    out = constrain(out, "batch", "seq_act", None)
+
+    new_state = None
+    if state is not None:
+        new_state = {"S": s_fin, "x_tm": x[:, -1].astype(jnp.float32),
+                     "x_cm": state["x_cm"]}
+    return out, new_state
+
+
+def apply_rwkv_channel_mix(p: dict, cfg: ModelConfig, x: jax.Array,
+                           state: dict | None, mode: str):
+    cdt = cfg.compute_dtype
+    prev = state["x_cm"] if (state is not None and mode == "decode") else None
+    xx = _shift(x, prev)
+    dx = xx - x
+    xk = x + dx * p["mu_k"].astype(cdt)
+    xr = x + dx * p["mu_r"].astype(cdt)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(cdt)))
+    out = jax.nn.sigmoid(xr @ p["w_r"].astype(cdt)) * (kk @ p["w_v"].astype(cdt))
+    new_state = None
+    if state is not None:
+        new_state = {**state, "x_cm": x[:, -1].astype(jnp.float32)}
+    return constrain(out, "batch", "seq_act", None), new_state

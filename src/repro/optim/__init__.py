@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamW, OptConfig, cosine_schedule  # noqa: F401

@@ -1,0 +1,76 @@
+"""The paper's §5 pipeline: asset-level correctness of the web-graph mining
+(dedup, weights, domain aggregation) + end-to-end orchestrated run."""
+import numpy as np
+
+from repro.data import commoncrawl as cc
+
+
+CFG = cc.CrawlConfig(n_domains=16, n_pages_per_domain=3, n_seed=12,
+                     max_links=5, tokens_per_page=16)
+
+
+def test_nodes_deduped_and_bounded():
+    n = cc.nodes_asset("2023-10", "s0", CFG)
+    seeds = n["seed_pages"]
+    assert len(np.unique(seeds)) == len(seeds)
+    assert len(seeds) <= CFG.n_seed
+    assert seeds.max() < CFG.n_domains * CFG.n_pages_per_domain
+
+
+def test_edges_only_from_seed_pages():
+    n = cc.nodes_asset("2023-10", "s0", CFG)
+    e = cc.edges_asset("2023-10", "s0", n, CFG)
+    assert set(np.unique(e["src"])) <= set(n["seed_pages"].tolist())
+    assert len(e["src"]) == len(e["dst"]) == len(e["weight"])
+    assert np.all(e["weight"] >= 0) and np.all(e["weight"] <= 1)
+
+
+def test_graph_deduplicates_and_sums_weights():
+    n = cc.nodes_asset("2023-10", "s0", CFG)
+    e = cc.edges_asset("2023-10", "s0", n, CFG)
+    g = cc.graph_asset(n, e)
+    pairs = list(zip(g["src"].tolist(), g["dst"].tolist()))
+    assert len(set(pairs)) == len(pairs), "graph edges must be unique"
+    np.testing.assert_allclose(g["weight"].sum(), e["weight"].sum(),
+                               rtol=1e-5)
+
+
+def test_graph_aggr_preserves_mass_and_domains():
+    n = cc.nodes_asset("2023-10", "s0", CFG)
+    e = cc.edges_asset("2023-10", "s0", n, CFG)
+    g = cc.graph_asset(n, e)
+    a = cc.graph_aggr_asset(g, CFG)
+    np.testing.assert_allclose(a["weight"].sum(), g["weight"].sum(),
+                               rtol=1e-4)
+    assert a["src_domain"].max() < CFG.n_domains
+    assert a["dst_domain"].max() < CFG.n_domains
+
+
+def test_determinism_across_processes():
+    a1 = cc.edges_asset("2023-11", "s1",
+                        cc.nodes_asset("2023-11", "s1", CFG), CFG)
+    a2 = cc.edges_asset("2023-11", "s1",
+                        cc.nodes_asset("2023-11", "s1", CFG), CFG)
+    np.testing.assert_array_equal(a1["src"], a2["src"])
+    np.testing.assert_allclose(a1["weight"], a2["weight"])
+
+
+def test_partitions_differ():
+    n1 = cc.nodes_asset("2023-10", "s0", CFG)
+    n2 = cc.nodes_asset("2023-11", "s0", CFG)
+    assert not np.array_equal(n1["seed_pages"], n2["seed_pages"])
+
+
+def test_end_to_end_orchestrated(tmp_path):
+    from benchmarks.cc_pipeline import run_policy
+    from repro.core import MultiPartitions, StaticPartitions
+    parts = MultiPartitions(dims=(
+        ("time", StaticPartitions(("2023-10",))),
+        ("domain", StaticPartitions(("shard-0",))),
+    ))
+    report, reader = run_policy("orchestrated", seed=4, partitions=parts)
+    assert report.ok
+    assert reader.events(kind="MATERIALIZE")
+    # edges must dominate the bill (Fig 5 shape)
+    costs = report.by_asset_cost()
+    assert costs["edges"] > 5 * (costs["nodes"] + costs["graph_aggr"])

@@ -1,0 +1,87 @@
+"""Schema + invariants of the dry-run artifacts (runs against whatever is in
+artifacts/dryrun; skips cleanly if the sweep hasn't been run)."""
+import glob
+import json
+import os
+
+import pytest
+
+ART = "artifacts/dryrun"
+
+cells = [json.load(open(p)) for p in sorted(glob.glob(os.path.join(ART, "*.json")))]
+
+pytestmark = pytest.mark.skipif(len(cells) < 10,
+                                reason="dry-run artifacts not generated")
+
+
+def test_cell_count_and_statuses():
+    # 10 archs x 4 shapes x 2 meshes = 80 records
+    assert len(cells) == 80
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    errors = [c for c in cells if c["status"] == "error"]
+    assert not errors, [(c["arch"], c["shape"], c["error"]) for c in errors]
+    assert len(ok) == 66
+    assert len(skipped) == 14  # 7 full-attention archs x long_500k x 2 meshes
+
+
+def test_skips_are_only_long_500k_full_attention():
+    for c in cells:
+        if c["status"] == "skipped":
+            assert c["shape"] == "long_500k"
+            assert "full-attention" in c["reason"]
+
+
+def test_ok_cells_have_roofline_terms():
+    for c in cells:
+        if c["status"] != "ok":
+            continue
+        r = c["roofline"]
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            assert r[k] >= 0, (c["arch"], c["shape"], k)
+        assert r["bottleneck"] in ("compute", "memory", "collective")
+        assert r["step_time_s"] == max(r["t_compute_s"], r["t_memory_s"],
+                                       r["t_collective_s"])
+        assert c["model_flops"] > 0
+        assert c["params_total"] >= c["params_active"] > 0
+
+
+def test_memory_fits_hbm():
+    """Argument residency (exact on CPU) must fit 16 GiB/chip."""
+    for c in cells:
+        if c["status"] != "ok":
+            continue
+        args = c["memory_analysis"].get("argument_size_in_bytes")
+        if args is not None:
+            assert args <= 16 * 2**30, (c["arch"], c["shape"], args / 2**30)
+
+
+def test_multipod_shards_the_pod_axis():
+    """The 2x16x16 mesh must reduce per-device argument bytes for train
+    cells (DP over the pod axis halves the batch shard; weights unchanged)."""
+    by = {(c["arch"], c["shape"], c["mesh"]): c for c in cells}
+    for (arch, shape, mesh), c in by.items():
+        if mesh != "16x16" or c["status"] != "ok" or c["kind"] != "train":
+            continue
+        multi = by.get((arch, shape, "2x16x16"))
+        assert multi is not None and multi["status"] == "ok"
+        a1 = c["memory_analysis"].get("argument_size_in_bytes", 0)
+        a2 = multi["memory_analysis"].get("argument_size_in_bytes", 0)
+        assert a2 <= a1 + 1e6, (arch, shape, a1, a2)
+
+
+def test_params_match_analytic_count():
+    """params_total in artifacts == ModelConfig.param_count() (stable)."""
+    from repro.configs import get_config
+    seen = set()
+    for c in cells:
+        if c["status"] != "ok" or c["arch"] in seen:
+            continue
+        seen.add(c["arch"])
+        assert c["params_total"] == get_config(c["arch"]).param_count()
+
+
+def test_moe_active_params_below_total():
+    for c in cells:
+        if c["status"] == "ok" and c["arch"].startswith("deepseek-v2"):
+            assert c["params_active"] < 0.15 * c["params_total"]

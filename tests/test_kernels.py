@@ -1,0 +1,124 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret-mode kernel vs the
+pure-jnp oracle (assignment requirement: per-kernel allclose against ref.py)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import attention_ref, wkv_ref
+from repro.models.recurrent import wkv_chunked
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+ATTN_CASES = [
+    # (B, Sq, Skv, Hq, Hkv, D, causal, window, dtype)
+    (1, 128, 128, 2, 2, 64, True, 0, jnp.float32),
+    (2, 256, 256, 4, 1, 64, True, 0, jnp.float32),   # MQA
+    (2, 256, 256, 8, 2, 32, True, 0, jnp.float32),   # GQA 4:1
+    (1, 128, 384, 2, 2, 64, True, 0, jnp.float32),   # q_offset continuation
+    (1, 256, 256, 2, 2, 64, True, 128, jnp.float32),  # sliding window
+    (1, 256, 256, 2, 1, 64, True, 64, jnp.float32),   # narrow window + MQA
+    (1, 128, 128, 2, 2, 64, False, 0, jnp.float32),   # bidirectional (encoder)
+    (2, 256, 256, 4, 4, 128, True, 0, jnp.bfloat16),
+    (1, 384, 384, 2, 2, 256, True, 0, jnp.bfloat16),  # gemma head_dim
+    (1, 256, 256, 4, 2, 80, True, 128, jnp.bfloat16),  # danube head_dim + SWA
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_vs_ref(case):
+    B, Sq, Skv, Hq, Hkv, D, causal, window, dtype = case
+    q_offset = Skv - Sq
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("block", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(block):
+    bq, bk = block
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    from repro.kernels.flash_attention import flash_attention
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+WKV_CASES = [
+    # (B, S, H, N, chunk)
+    (1, 64, 2, 16, 16),
+    (2, 128, 2, 32, 32),
+    (1, 128, 4, 64, 64),
+    (2, 96, 2, 16, 32),  # chunk > remainder handling (96 % 32 == 0)
+]
+
+
+def _wkv_inputs(B, S, H, N, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r = jax.random.normal(ks[0], (B, S, H, N), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, N), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, N), jnp.float32)
+    # realistic decays: log_w = -exp(w_raw), w_raw in [-6, 0]
+    w_raw = jax.random.uniform(ks[3], (B, S, H, N), jnp.float32, -6.0, 0.0)
+    log_w = -jnp.exp(w_raw)
+    u = jax.random.normal(ks[4], (H, N), jnp.float32) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, N, N), jnp.float32) * 0.5
+    return r, k, v, log_w, u, s0
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_linear_scan_kernel_vs_ref(case):
+    B, S, H, N, chunk = case
+    r, k, v, log_w, u, s0 = _wkv_inputs(B, S, H, N)
+    y, s_fin = ops.linear_scan(r, k, v, log_w, u, s0, chunk=chunk,
+                               interpret=True)
+    y_ref, s_ref = wkv_ref(r, k, v, log_w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_chunked_xla_path_vs_ref():
+    """The XLA chunked-parallel path used in model code must match the oracle."""
+    r, k, v, log_w, u, s0 = _wkv_inputs(2, 160, 2, 32, seed=3)
+    y, s_fin = wkv_chunked(r, k, v, log_w, u, s0, chunk=32)
+    y_ref, s_ref = wkv_ref(r, k, v, log_w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_core_vs_ref_banded():
+    """models.attention.attention_core (banded SWA streaming) vs oracle."""
+    from repro.models.attention import attention_core
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, D, W = 1, 4096, 2, 32, 256
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    out = attention_core(q, k, v, pos, pos, causal=True, window=W)
+    ref = attention_ref(q, k, v, causal=True, window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

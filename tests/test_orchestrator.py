@@ -1,0 +1,241 @@
+"""Orchestrator behaviour: DAG scheduling, caching, retries/failover,
+straggler speculation, cost accounting, partitions."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (AssetGraph, ComputeProfile, CostModel,
+                        DynamicClientFactory, MessageReader,
+                        MultiPartitions, Objective, RetryPolicy,
+                        RunCoordinator, StaticPartitions,
+                        TimeWindowPartitions, asset, default_catalog)
+from repro.core.platforms import Platform
+
+
+def make_factory(objective=None, seed=0, sim_time_scale=0.0, catalog=None):
+    return DynamicClientFactory(
+        catalog or default_catalog(), CostModel(),
+        objective or Objective.balanced(), sim_seed=seed,
+        sim_time_scale=sim_time_scale)
+
+
+def nofail_factory(objective=None):
+    """For tests of pure mechanics: run_ids are random uuids, so injected
+    failures would be flaky by design — turn injection off."""
+    from repro.core.clients import SimulatedClusterClient
+
+    return DynamicClientFactory(
+        default_catalog(), CostModel(), objective or Objective.balanced(),
+        client_builder=lambda p: SimulatedClusterClient(
+            p, failure_rate=0.0, preemption_rate=0.0))
+
+
+def test_time_window_partitions():
+    p = TimeWindowPartitions("2023-10", "2024-03")
+    assert p.keys() == ["2023-10", "2023-11", "2023-12",
+                        "2024-01", "2024-02", "2024-03"]
+
+
+def test_multi_partitions_cross_product():
+    p = MultiPartitions(dims=(
+        ("time", TimeWindowPartitions("2024-01", "2024-02")),
+        ("domain", StaticPartitions(("shard-0", "shard-1"))),
+    ))
+    assert len(p.keys()) == 4
+    assert p.split("2024-01/shard-1") == {"time": "2024-01",
+                                          "domain": "shard-1"}
+
+
+def test_dag_topo_and_cycle_detection():
+    a = asset(name="a")(lambda ctx: 1)
+    b = asset(name="b", deps=("a",))(lambda ctx, a: a + 1)
+    c = asset(name="c", deps=("a", "b"))(lambda ctx, a, b: a + b)
+    g = AssetGraph([a, b, c])
+    assert g.topo_order() == ["a", "b", "c"]
+    bad = AssetGraph([
+        asset(name="x", deps=("y",))(lambda ctx, y: y),
+        asset(name="y", deps=("x",))(lambda ctx, x: x),
+    ])
+    with pytest.raises(ValueError, match="cycle"):
+        bad.topo_order()
+
+
+def test_end_to_end_materialize_with_deps():
+    """Pure dependency mechanics — fault injection off (run_ids are random
+    uuids, so injected failures would make this flaky by design)."""
+    from repro.core.clients import SimulatedClusterClient
+
+    calls = []
+
+    @asset(name="up", compute=ComputeProfile(work_chip_hours=0.01))
+    def up(ctx):
+        calls.append("up")
+        return 21
+
+    @asset(name="down", deps=("up",),
+           compute=ComputeProfile(work_chip_hours=0.01))
+    def down(ctx, up):
+        calls.append("down")
+        return up * 2
+
+    coord = RunCoordinator(AssetGraph([up, down]), nofail_factory())
+    report = coord.materialize(["down"])
+    assert report.ok
+    assert coord.store.get("down", "__all__") == 42
+    assert calls == ["up", "down"]
+
+
+def test_caching_skips_fresh_materializations():
+    n_runs = [0]
+
+    @asset(name="cached_asset", compute=ComputeProfile(work_chip_hours=0.01))
+    def cached_asset(ctx):
+        n_runs[0] += 1
+        return n_runs[0]
+
+    g = AssetGraph([cached_asset])
+    coord = RunCoordinator(g, nofail_factory())
+    coord.materialize(["cached_asset"])
+    # second run through the same coordinator: fingerprint unchanged -> skip
+    report2 = coord.materialize(["cached_asset"])
+    assert n_runs[0] == 1
+    assert report2.records[0].cached
+
+
+def test_partitioned_fan_in():
+    parts = StaticPartitions(("p0", "p1", "p2"))
+
+    @asset(name="shards", partitions=parts,
+           compute=ComputeProfile(work_chip_hours=0.005))
+    def shards(ctx):
+        return int(ctx.partition_key[1:]) + 1
+
+    @asset(name="merged", deps=("shards",),
+           compute=ComputeProfile(work_chip_hours=0.005))
+    def merged(ctx, shards):
+        assert isinstance(shards, dict) and len(shards) == 3
+        return sum(shards.values())
+
+    coord = RunCoordinator(AssetGraph([shards, merged]), nofail_factory())
+    report = coord.materialize(["merged"])
+    assert report.ok
+    assert coord.store.get("merged", "__all__") == 6
+
+
+def test_retry_and_failover_on_flaky_platform():
+    """A platform whose *actual* reliability is far worse than the catalog's
+    belief must be retried then failed-over, and the failed attempts must
+    still be billed (Fig 3 economics)."""
+    from repro.core.clients import SimulatedClusterClient
+
+    catalog = default_catalog()
+
+    def builder(p):
+        # reality: spot always fails; catalog still believes 22%
+        return SimulatedClusterClient(
+            p, seed=5, failure_rate=1.0 if p.name == "pod-spot" else 0.0,
+            preemption_rate=0.0)
+
+    factory = DynamicClientFactory(catalog, CostModel(),
+                                   Objective.min_cost(),
+                                   client_builder=builder)
+
+    @asset(name="flaky", retry=RetryPolicy(max_attempts=5, backoff_s=0.0,
+                                           failover_after=2),
+           compute=ComputeProfile(work_chip_hours=10.0, min_chips=64))
+    def flaky(ctx):
+        return "done"
+
+    reader = MessageReader()
+    coord = RunCoordinator(AssetGraph([flaky]), factory, reader=reader)
+    report = coord.materialize(["flaky"])
+    assert report.ok
+    rec = report.records[0]
+    assert rec.status == "success"
+    assert len(rec.attempts) >= 3  # 2 spot failures then failover
+    assert any(a.status == "failure" for a in rec.attempts)
+    assert rec.attempts[-1].platform != "pod-spot"
+    assert reader.events(kind="FAILOVER")
+    # failures billed
+    failed_cost = sum(a.cost_usd for a in rec.attempts
+                      if a.status == "failure")
+    assert failed_cost > 0
+
+
+def test_hard_failure_raises_after_max_attempts():
+    catalog = {"pod-spot": Platform(
+        **{**default_catalog()["pod-spot"].__dict__, "failure_rate": 1.0})}
+    factory = make_factory(Objective.min_cost(), seed=9, catalog=catalog)
+
+    @asset(name="doomed", retry=RetryPolicy(max_attempts=2, backoff_s=0.0),
+           compute=ComputeProfile(work_chip_hours=10.0, min_chips=64))
+    def doomed(ctx):
+        return 1
+
+    coord = RunCoordinator(AssetGraph([doomed]), factory)
+    with pytest.raises(RuntimeError, match="failed after 2 attempts"):
+        coord.materialize(["doomed"])
+
+
+def test_straggler_speculation():
+    """The cheapest platform straggles 50x; after enough partitions finish on
+    the healthy one, the coordinator must speculatively re-dispatch and win."""
+    from repro.core.clients import SimulatedClusterClient
+
+    catalog = default_catalog()
+
+    def builder(p):
+        # partition p7 straggles 200x on spot (a sick node holding one shard)
+        return SimulatedClusterClient(
+            p, seed=1, sim_time_scale=3e-5, failure_rate=0.0,
+            preemption_rate=0.0,
+            duration_bias=lambda ctx: (
+                200.0 if (ctx.partition_key == "p7"
+                          and p.name == "pod-spot") else 1.0))
+
+    parts = StaticPartitions(tuple(f"p{i}" for i in range(8)))
+
+    @asset(name="uneven", partitions=parts,
+           compute=ComputeProfile(work_chip_hours=80.0, min_chips=64))
+    def uneven(ctx):
+        return ctx.partition_key
+
+    reader = MessageReader()
+    factory = DynamicClientFactory(catalog, CostModel(),
+                                   Objective.min_cost(),
+                                   client_builder=builder)
+    coord = RunCoordinator(AssetGraph([uneven]), factory, reader=reader,
+                           straggler_factor=2.0, straggler_min_s=0.005,
+                           max_concurrent=8)
+    report = coord.materialize(["uneven"])
+    assert report.ok
+    # min_cost picks pod-spot (believed cheap) -> it straggles -> speculation
+    assert reader.events(kind="SPECULATE"), "no speculative re-dispatch"
+    spec_wins = [a for r in report.records for a in r.attempts
+                 if a.speculative and a.status == "success"]
+    assert spec_wins, "speculative twin never won"
+
+
+def test_cost_model_prefers_cheap_for_light_and_fast_for_deadline():
+    light = ComputeProfile(work_chip_hours=0.5, speedup_class="light")
+    heavy = ComputeProfile(work_chip_hours=2000.0, speedup_class="scan")
+    a_light = asset(name="l", compute=light)(lambda ctx: 0)
+    a_heavy = asset(name="h", compute=heavy)(lambda ctx: 0)
+
+    f_cost = make_factory(Objective.min_cost())
+    f_time = make_factory(Objective.min_time())
+    p, _ = f_cost.choose(a_light)
+    assert p.name in ("local", "pod-spot")  # cheapest feasible
+    p, _ = f_time.choose(a_heavy)
+    assert p.kind in ("premium", "multipod") or p.chips >= 256
+
+
+def test_telemetry_outcome_counts():
+    reader = MessageReader()
+    reader.emit("r", "a", "p", "pod-spot", "SUCCESS", duration_s=1.0)
+    reader.emit("r", "a", "p", "pod-spot", "FAILURE")
+    reader.emit("r", "a", "p", "pod-premium", "SUCCESS", duration_s=2.0)
+    counts = reader.outcome_counts()
+    assert counts["pod-spot"] == {"success": 1, "failure": 1, "cancelled": 0}
+    assert np.isclose(reader.median_duration("a"), 1.5)

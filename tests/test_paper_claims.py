@@ -1,0 +1,68 @@
+"""Faithful-reproduction gates: the paper's own claims, validated against the
+calibrated platform catalog + orchestrator (EXPERIMENTS.md §Claims)."""
+import pytest
+
+from benchmarks.table1_cost import TABLE1, headline_claims, per_cell_table
+
+
+@pytest.fixture(scope="module")
+def claims():
+    return headline_claims(n_seeds=16)
+
+
+def test_cost_reduction_vs_dbr_at_least_40pct(claims):
+    """Paper: '40% cost reduction compared to DBR' (Table-1 basis; the
+    simulated basis adds failure/retry billing + duration jitter and is
+    asserted looser)."""
+    assert claims["cost_reduction_vs_premium_table_basis"] >= 0.40
+    assert claims["cost_reduction_vs_premium_simulated"] >= 0.32
+
+
+def test_savings_over_300_per_run(claims):
+    """Paper: 'over 300 euros saved per pipeline run'."""
+    assert claims["savings_usd_per_run"] >= 300.0
+
+
+def test_12pct_performance_improvement(claims):
+    """Paper: '12% performance improvement over EMR' — reproduced in the
+    platform-tuning reading (§6 tuning narrative; see DESIGN.md)."""
+    assert abs(claims["tuning_improvement_vs_untuned_spot"] - 0.12) < 0.01
+
+
+def test_table1_heavy_rows_match():
+    """edges (the cost-dominant asset): model vs Table 1 within 10%
+    duration / 10% cost on both platforms."""
+    rows = per_cell_table()
+    for asset_name, plat, ref_h, ref_usd in TABLE1:
+        if asset_name != "edges":
+            continue
+        row = next(r for r in rows
+                   if r["asset"] == asset_name and r["platform"] == plat)
+        assert abs(row["duration_h"] - ref_h) / ref_h < 0.10, (plat, row)
+        assert abs(row["total_usd"] - ref_usd) / ref_usd < 0.10, (plat, row)
+
+
+def test_reliability_gap_spot_vs_premium():
+    """Fig 3: the cheap platform fails more and needs more attempts
+    (expected ratio (1/0.70)/(1/0.88) ~ 1.26 at the calibrated rates)."""
+    from benchmarks.fig3_reliability import run
+    out = run(n_seeds=14)
+    assert out["failure_rate"]["pod-spot"] > out["failure_rate"]["pod-premium"]
+    assert out["trial_ratio_spot_over_premium"] > 1.08
+
+
+def test_fig6_premium_faster_on_heavy_steps():
+    from benchmarks.fig6_durations import run
+    table = run(n_seeds=5)
+    assert (table["edges@pod-spot"]["median_h"]
+            > 1.25 * table["edges@pod-premium"]["median_h"])
+
+
+def test_fig4_effort_gap():
+    """Fig 4: 'almost double the number of trial runs for EMR' before
+    production stability, with far more cumulative config changes."""
+    from benchmarks.fig4_effort import run
+    out = run(n_seeds=30)
+    assert 1.5 < out["trial_ratio_spot_over_premium"] < 3.0
+    assert (out["pod-spot"]["mean_changes"]
+            > 2.0 * out["pod-premium"]["mean_changes"])

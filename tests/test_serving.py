@@ -1,0 +1,72 @@
+"""Continuous-batching serving: ragged slot occupancy must reproduce the
+sequential single-request decode exactly (greedy tokens)."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import ContinuousBatcher, Request
+from repro.models import LanguageModel
+
+
+def _model(arch="gemma-2b"):
+    mod = importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+    cfg = mod.smoke().scaled(compute_dtype="float32")
+    model = LanguageModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _sequential_greedy(cfg, model, params, prompt, max_new):
+    cache = model.init_cache(1, 64, enc_len=8, dtype=jnp.float32)
+    logits = None
+    for i, tok in enumerate(prompt):
+        t = jnp.asarray([[tok]], jnp.int32)
+        logits, cache = model.decode_step(params, t, cache,
+                                          jnp.asarray([i], jnp.int32))
+    out = []
+    cur = int(jnp.argmax(logits[0]))
+    pos = len(prompt)
+    for _ in range(max_new):
+        out.append(cur)
+        logits, cache = model.decode_step(
+            params, jnp.asarray([[cur]], jnp.int32), cache,
+            jnp.asarray([pos], jnp.int32))
+        cur = int(jnp.argmax(logits[0]))
+        pos += 1
+    return out
+
+
+def test_continuous_batching_matches_sequential():
+    cfg, model, params = _model()
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, 5).tolist() for _ in range(3)]
+    max_new = 6
+
+    refs = [_sequential_greedy(cfg, model, params, p, max_new)
+            for p in prompts]
+
+    batcher = ContinuousBatcher(model, params, n_slots=2, max_len=64)
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    stats = batcher.run(reqs)
+    assert stats["tokens"] == 3 * max_new
+    for r, ref in zip(reqs, refs):
+        # first emitted token is argmax after prefill == ref[0]; subsequent
+        # tokens follow the same greedy chain
+        assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_slots_recycled():
+    cfg, model, params = _model("rwkv6-1.6b")
+    rng = np.random.RandomState(1)
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab_size, 3).tolist(),
+                    max_new=4)
+            for i in range(5)]
+    batcher = ContinuousBatcher(model, params, n_slots=2, max_len=32)
+    stats = batcher.run(reqs)  # 5 requests through 2 slots
+    assert stats["requests"] == 5
+    assert stats["tokens"] == 20
+    assert all(r.done for r in reqs)

@@ -1,0 +1,69 @@
+"""MeshInfo logical-axis resolution: divisibility fallback, axis reuse,
+spec construction — the invariants the whole distribution layer rests on."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import MeshInfo, constrain, use_mesh_info
+
+
+class FakeMesh:
+    """Just enough of a Mesh for MeshInfo's spec logic (no devices)."""
+
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.devices = np.empty(tuple(shape.values()), dtype=object)
+
+
+def info(**shape) -> MeshInfo:
+    return MeshInfo(FakeMesh(shape))  # type: ignore[arg-type]
+
+
+def test_batch_spreads_over_pod_and_data():
+    i = info(pod=2, data=16, model=16)
+    assert i.spec((256, 4096), ("batch", "seq_act")) == P(("pod", "data"),
+                                                          "model")
+
+
+def test_divisibility_fallback_drops_axis():
+    i = info(data=16, model=16)
+    # 8 kv heads can't shard over 16-way model: dropped
+    assert i.spec((32, 1024, 8, 128),
+                  ("batch", None, "kv_heads", None)) == P("data")
+    # 32 kv heads can
+    assert i.spec((32, 1024, 32, 128),
+                  ("batch", None, "kv_heads", None)) == P("data", None,
+                                                          "model")
+
+
+def test_axis_used_once_per_tensor():
+    i = info(data=16, model=16)
+    # both dims want "model": first one wins, second drops
+    spec = i.spec((64, 64), ("heads", "mlp"))
+    assert spec == P("model")
+
+
+def test_batch_one_cannot_shard():
+    i = info(data=16, model=16)
+    assert i.spec((1, 524288), ("batch", "kv_seq")) == P(None, "model")
+
+
+def test_partial_divisibility_multi_axis():
+    i = info(pod=2, data=16, model=16)
+    # batch 16: divisible by pod(2) then pod*data(32)? 16 % 32 != 0 -> pod only
+    assert i.spec((16, 8), ("batch", None)) == P("pod")
+    # batch 64: 64 % 2 == 0, 64 % 32 == 0 -> both
+    assert i.spec((64, 8), ("batch", None)) == P(("pod", "data"))
+
+
+def test_constrain_noop_without_mesh():
+    x = jax.numpy.ones((4, 4))
+    y = constrain(x, "batch", "seq_act")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_trailing_nones_trimmed():
+    i = info(data=16, model=16)
+    spec = i.spec((32, 64, 64, 64), ("batch", None, None, None))
+    assert spec == P("data")
