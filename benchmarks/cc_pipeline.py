@@ -76,8 +76,9 @@ def build_graph(cfg: cc.CrawlConfig | None = None,
 
 def run_policy(policy: str, seed: int = 0, partitions=None,
                objective: Objective | None = None):
-    """policy: 'orchestrated' (dynamic factory) | 'all-spot' | 'all-premium'
-    | 'paper-mix' (run-1 of Table 1: edges on EMR, graph on DBR)."""
+    """policy: 'orchestrated' (dynamic factory) | 'planned' (DAG-level
+    RunPlanner) | 'all-spot' | 'all-premium' | 'paper-mix' (run-1 of
+    Table 1: edges on EMR, graph on DBR)."""
     hints = {}
     if policy == "all-spot":
         hints = {k: "pod-spot" for k in PROFILES}
@@ -92,5 +93,7 @@ def run_policy(policy: str, seed: int = 0, partitions=None,
                                    objective or Objective.balanced(),
                                    sim_seed=seed)
     coord = RunCoordinator(g, factory, reader=reader, use_cache=False)
-    report = coord.materialize(["graph_aggr"], run_id=f"{policy}-{seed}")
+    plan = coord.plan(["graph_aggr"]) if policy == "planned" else None
+    report = coord.materialize(["graph_aggr"], run_id=f"{policy}-{seed}",
+                               plan=plan)
     return report, reader

@@ -1,15 +1,59 @@
 """Benchmark runner — one entry per paper table/figure plus the roofline and
-substrate microbenchmarks.  Prints ``name,us_per_call,derived`` CSV."""
+substrate microbenchmarks.  Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke`` runs the fast orchestration-only subset (no jax compiles) and
+writes ``BENCH_smoke.json`` for the CI artifact upload."""
 from __future__ import annotations
 
+import argparse
 import json
+import os
+import sys
 import time
+
+# make `python benchmarks/run.py` equivalent to `python -m benchmarks.run`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def _timed(fn):
     t0 = time.perf_counter()
     out = fn()
     return (time.perf_counter() - t0) * 1e6, out
+
+
+def _planner_row(rows, smoke: bool):
+    from benchmarks import planner_vs_greedy
+    us, pv = _timed(lambda: planner_vs_greedy.run(smoke=smoke))
+    s = pv["summary"]
+    rows.append(("planner_vs_greedy", us,
+                 f"dominates={s['n_dominates']}/{s['n_configs']};"
+                 f"max_saving_pct={s['max_cost_saving_pct']:.1f}"))
+    return pv
+
+
+def _print_rows(rows) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def smoke() -> None:
+    """Fast subset for CI: Table-1 economics + planner sweep (~seconds)."""
+    rows: list[tuple[str, float, str]] = []
+
+    from benchmarks import table1_cost
+    us, t1 = _timed(table1_cost.run)
+    claims = t1["claims"]
+    rows.append(("table1_cost", us,
+                 f"cost_reduction_vs_premium="
+                 f"{claims['cost_reduction_vs_premium_table_basis']:.3f}"))
+    pv = _planner_row(rows, smoke=True)
+    _print_rows(rows)
+    with open("BENCH_smoke.json", "w") as f:
+        json.dump({"table1": t1, "planner_vs_greedy": pv}, f, indent=1,
+                  default=float)
 
 
 def main() -> None:
@@ -69,20 +113,28 @@ def main() -> None:
                  f"cells={len(lm)};train_on_premium={prem}/"
                  f"{len(train_cells)}"))
 
+    pv = _planner_row(rows, smoke=False)
+
     from benchmarks import microbench
     for name, val in microbench.run().items():
         rows.append((f"micro_{name}", val, ""))
 
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    _print_rows(rows)
 
     with open("artifacts/bench_results.json", "w") as f:
         json.dump({"table1": t1, "fig3": f3, "fig4": f4, "fig5": f5,
                    "fig6": f6, "lm_platform_choice": lm,
+                   "planner_vs_greedy": pv,
                    "roofline": {k: v for k, v in rf.items() if k != "rows"}},
                   f, indent=1, default=float)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast orchestration-only subset; writes "
+                         "BENCH_smoke.json")
+    if ap.parse_args().smoke:
+        smoke()
+    else:
+        main()

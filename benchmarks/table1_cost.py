@@ -16,8 +16,7 @@ import statistics
 
 from benchmarks.cc_pipeline import (PROFILES, SMALL, build_graph,  # noqa: F401
                                     run_policy)
-from repro.core import (CostModel, MultiPartitions, Objective,
-                        StaticPartitions, default_catalog)
+from repro.core import CostModel, default_catalog
 from repro.core.platforms import Platform
 
 # Table 1 reference rows (run, step, platform, duration_h, total_usd)

@@ -4,7 +4,14 @@ crawl-month x domain-shard, dispatched across platforms by cost.
 
     PYTHONPATH=src python examples/commoncrawl_graph.py
 """
-from benchmarks.cc_pipeline import build_graph
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from benchmarks.cc_pipeline import build_graph  # noqa: E402
 from repro.core import (CostModel, DynamicClientFactory, MessageReader,
                         MultiPartitions, Objective, RunCoordinator,
                         StaticPartitions, default_catalog)
@@ -21,7 +28,15 @@ def main() -> None:
     factory = DynamicClientFactory(default_catalog(), CostModel(),
                                    Objective.balanced(), sim_seed=3)
     coord = RunCoordinator(graph, factory, reader=reader)
-    report = coord.materialize(["graph_aggr"])
+
+    # global DAG-level plan first: critical path on fast platforms, slack
+    # tasks on cheap ones — then execute it (greedy fallback on failover)
+    plan = coord.plan(["graph_aggr"])
+    print("run plan preview:")
+    print(plan.table())
+    print()
+
+    report = coord.materialize(["graph_aggr"], plan=plan)
     print(report.summary())
 
     agg = coord.store.get("graph_aggr", "2023-10/shard-0")

@@ -1,0 +1,7 @@
+"""Cost-effective multi-platform big-data orchestration (paper repro).
+
+Kept intentionally import-light: subpackages (``repro.core``, ``repro.models``,
+...) pull in jax lazily so orchestration-only consumers stay fast.
+"""
+
+__version__ = "0.2.0"

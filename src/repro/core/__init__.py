@@ -8,7 +8,10 @@ from repro.core.coordinator import RunCoordinator, RunReport  # noqa: F401
 from repro.core.costmodel import CostEstimate, CostModel  # noqa: F401
 from repro.core.factory import DynamicClientFactory, Objective  # noqa: F401
 from repro.core.partitions import (MultiPartitions, PartitionsDefinition,  # noqa: F401
-                                   StaticPartitions, TimeWindowPartitions)
+                                   StaticPartitions, TimeWindowPartitions,
+                                   dep_partition_keys)
+from repro.core.planner import (PlannedChoice, RunPlan, RunPlanner,  # noqa: F401
+                                plan_run)
 from repro.core.platforms import Platform, default_catalog  # noqa: F401
 from repro.core.store import MaterializationStore  # noqa: F401
 from repro.core.telemetry import Event, MessageReader  # noqa: F401

@@ -9,7 +9,6 @@ import os
 from typing import Any
 
 from repro.core.assets import AssetSpec
-from repro.core.partitions import MultiPartitions
 from repro.core.platforms import Platform
 from repro.core.telemetry import MessageReader
 

@@ -11,7 +11,6 @@ to "EMR needs continual oversight".
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
 import uuid
 from typing import Any
@@ -21,7 +20,8 @@ from repro.core.clients import JobSpec, PlatformError, RunHandle
 from repro.core.context import ContextInjector
 from repro.core.costmodel import CostEstimate
 from repro.core.factory import DynamicClientFactory
-from repro.core.partitions import partition_keys
+from repro.core.partitions import dep_partition_keys, partition_keys
+from repro.core.planner import RunPlan, RunPlanner
 from repro.core.store import MaterializationStore
 from repro.core.telemetry import MessageReader
 
@@ -154,8 +154,17 @@ class RunCoordinator:
         self.use_cache = use_cache
 
     # ------------------------------------------------------------------ api
+    def plan(self, targets: list[str] | None = None,
+             objective=None) -> RunPlan:
+        """Global cost/deadline-aware platform assignment (see planner.py)."""
+        return RunPlanner(self.graph, self.factory).plan(targets, objective)
+
     def materialize(self, targets: list[str] | None = None,
-                    run_id: str | None = None) -> RunReport:
+                    run_id: str | None = None,
+                    plan: RunPlan | None = None) -> RunReport:
+        if plan is not None and not plan.feasible:
+            raise ValueError(f"refusing to execute infeasible plan: "
+                             f"{plan.reason}")
         run_id = run_id or uuid.uuid4().hex[:10]
         order = self.graph.topo_order(targets)
         tasks: dict[tuple[str, str], _Task] = {}
@@ -223,15 +232,26 @@ class RunCoordinator:
                                      "cache", "SUCCESS", duration_s=0.0,
                                      cached=True)
                     continue
-                try:
-                    platform, est = self.factory.choose(t.spec, deny=t.deny)
-                except RuntimeError:
-                    # every platform deny-listed: reset and take the best
-                    # remaining option anyway (failures were transient)
-                    t.deny.clear()
-                    self.reader.emit(run_id, t.spec.name, t.partition, "",
-                                     "DENY_RESET")
-                    platform, est = self.factory.choose(t.spec)
+                platform = est = None
+                if plan is not None:
+                    pc = plan.choice(t.spec.name, t.partition)
+                    if (pc is not None and pc.platform not in t.deny
+                            and pc.platform in self.factory.catalog):
+                        platform = self.factory.catalog[pc.platform]
+                        est = pc.estimate
+                if platform is None:
+                    # no plan, or the planned platform was deny-listed after
+                    # failures: fall back to the greedy per-task factory
+                    try:
+                        platform, est = self.factory.choose(t.spec,
+                                                            deny=t.deny)
+                    except RuntimeError:
+                        # every platform deny-listed: reset and take the best
+                        # remaining option anyway (failures were transient)
+                        t.deny.clear()
+                        self.reader.emit(run_id, t.spec.name, t.partition, "",
+                                         "DENY_RESET")
+                        platform, est = self.factory.choose(t.spec)
                 # elastic scaling: grow this platform's slot budget while a
                 # backlog exists (paper: "automatic scaling")
                 cur = slots.get(platform.name, self.platform_slots)
@@ -255,7 +275,8 @@ class RunCoordinator:
                                  platform.name, "SUBMIT",
                                  attempt=t.attempt,
                                  est_usd=est.total_usd,
-                                 est_duration_s=est.duration_s)
+                                 est_duration_s=est.duration_s,
+                                 planned=plan is not None)
                 t.handle = self.factory.client(platform).submit(job)
                 t.launched_at = now
                 pending.remove(t)
@@ -320,12 +341,7 @@ class RunCoordinator:
 
     # ------------------------------------------------------------ internals
     def _dep_keys(self, dspec: AssetSpec, partition: str) -> list[str]:
-        dkeys = partition_keys(dspec.partitions)
-        if partition in dkeys:
-            return [partition]
-        if dkeys == ["__all__"]:
-            return ["__all__"]
-        return dkeys  # fan-in: downstream consumes every upstream partition
+        return dep_partition_keys(dspec.partitions, partition)
 
     def _maybe_speculate(self, run_id: str, t: _Task) -> None:
         if (not self.enable_speculation or t.spec_handle is not None

@@ -25,10 +25,17 @@ class Objective:
     min_cost  -> time_value 0 (the budget-conscious EMR regime)
     min_time  -> huge time_value (the DBR regime)
     balanced  -> the paper's operating point: deadlines matter, money matters.
+
+    ``budget_usd`` / ``deadline_s`` are *run-level* constraints: the greedy
+    per-task ``choose`` cannot see them (it scores tasks in isolation), so
+    they only bind through the DAG-level ``RunPlanner``, which marks a plan
+    infeasible when they cannot be met.
     """
 
     name: str
     time_value_usd_per_hour: float
+    budget_usd: float | None = None
+    deadline_s: float | None = None
 
     @staticmethod
     def min_cost() -> "Objective":
@@ -41,6 +48,12 @@ class Objective:
     @staticmethod
     def balanced(usd_per_hour: float = 60.0) -> "Objective":
         return Objective("balanced", usd_per_hour)
+
+    def constrained(self, budget_usd: float | None = None,
+                    deadline_s: float | None = None) -> "Objective":
+        """Copy with run-level budget/deadline constraints attached."""
+        return dataclasses.replace(self, budget_usd=budget_usd,
+                                   deadline_s=deadline_s)
 
 
 class DynamicClientFactory:

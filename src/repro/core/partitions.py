@@ -71,3 +71,15 @@ class MultiPartitions(PartitionsDefinition):
 def partition_keys(p: PartitionsDefinition | None) -> list[str]:
     """None => a single unpartitioned pseudo-key."""
     return p.keys() if p is not None else ["__all__"]
+
+
+def dep_partition_keys(dep: PartitionsDefinition | None,
+                       partition: str) -> list[str]:
+    """Which upstream partitions a task with ``partition`` consumes: the
+    matching key when partitionings align, every key on fan-in."""
+    dkeys = partition_keys(dep)
+    if partition in dkeys:
+        return [partition]
+    if dkeys == ["__all__"]:
+        return ["__all__"]
+    return dkeys  # fan-in: downstream consumes every upstream partition

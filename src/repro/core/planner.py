@@ -1,0 +1,341 @@
+"""DAG-level cost/deadline-aware run planner.
+
+``DynamicClientFactory.choose`` is a per-task greedy argmin: it scores each
+(asset, partition) in isolation, so under time pressure it happily pays the
+premium surcharge for *every* task even though only the critical path decides
+the makespan.  The planner fixes that with a global pass over the task DAG:
+
+1. price every task on every feasible platform (expected cost with retries,
+   roofline duration),
+2. build the greedy baseline the factory would have produced (its makespan
+   becomes the default deadline, so a plan is never slower than greedy),
+3. start from the cheapest feasible assignment and *upgrade* critical-path
+   tasks — picking the move with the best seconds-saved-per-dollar — until
+   the deadline target is met,
+4. run a slack-based *downgrade* pass: off-path tasks move to cheaper
+   platforms whenever the schedule shows the makespan does not grow,
+5. check ``Objective.budget_usd`` / ``Objective.deadline_s`` and mark the
+   plan infeasible (with a proof-style reason when even the cheapest/fastest
+   assignment cannot satisfy the constraint).
+
+The result is a ``RunPlan`` mapping every (asset, partition) to a
+``PlannedChoice``; ``RunCoordinator.materialize(plan=...)`` consumes it and
+falls back to the greedy factory on failover/deny.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.assets import AssetGraph
+from repro.core.costmodel import CostEstimate
+from repro.core.factory import DynamicClientFactory, Objective
+from repro.core.partitions import dep_partition_keys, partition_keys
+
+TaskKey = tuple[str, str]  # (asset, partition)
+
+#: slack below this fraction of the makespan counts as "on the critical path"
+_CRITICAL_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannedChoice:
+    """Final platform assignment for one (asset, partition) task."""
+
+    asset: str
+    partition: str
+    platform: str
+    estimate: CostEstimate
+    expected_cost_usd: float  # retry-aware (cost / P(success))
+    critical: bool = False
+    slack_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class _Candidate:
+    platform: str
+    estimate: CostEstimate
+    cost_usd: float  # expected, retry-aware
+    duration_s: float
+
+
+@dataclasses.dataclass
+class _Schedule:
+    makespan_s: float
+    finish: dict[TaskKey, float]
+    slack: dict[TaskKey, float]
+
+    def critical(self, key: TaskKey) -> bool:
+        return self.slack[key] <= _CRITICAL_EPS * max(self.makespan_s, 1.0)
+
+
+@dataclasses.dataclass
+class RunPlan:
+    objective: Objective
+    choices: dict[TaskKey, PlannedChoice]
+    predicted_cost_usd: float
+    predicted_makespan_s: float
+    greedy_cost_usd: float
+    greedy_makespan_s: float
+    feasible: bool = True
+    reason: str = ""
+    iterations: int = 0
+
+    def choice(self, asset: str, partition: str) -> PlannedChoice | None:
+        return self.choices.get((asset, partition))
+
+    @property
+    def cost_delta_vs_greedy(self) -> float:
+        return self.predicted_cost_usd - self.greedy_cost_usd
+
+    @property
+    def makespan_delta_vs_greedy(self) -> float:
+        return self.predicted_makespan_s - self.greedy_makespan_s
+
+    def table(self) -> str:
+        """Per-task assignment table plus predicted totals vs greedy."""
+        hdr = (f"{'task':<34} {'platform':<14} {'exp_usd':>9} "
+               f"{'dur_h':>7} {'slack_h':>8} crit")
+        lines = [hdr, "-" * len(hdr)]
+        for (a, p), c in sorted(self.choices.items()):
+            lines.append(
+                f"{a + '[' + p + ']':<34} {c.platform:<14} "
+                f"{c.expected_cost_usd:>9.2f} "
+                f"{c.estimate.duration_s / 3600.0:>7.2f} "
+                f"{c.slack_s / 3600.0:>8.2f} {'*' if c.critical else ''}")
+        lines.append("-" * len(hdr))
+        lines.append(
+            f"planned: ${self.predicted_cost_usd:.2f} / "
+            f"{self.predicted_makespan_s / 3600.0:.2f} h   "
+            f"greedy: ${self.greedy_cost_usd:.2f} / "
+            f"{self.greedy_makespan_s / 3600.0:.2f} h   "
+            f"delta: ${self.cost_delta_vs_greedy:+.2f} / "
+            f"{self.makespan_delta_vs_greedy / 3600.0:+.2f} h")
+        if self.objective.budget_usd is not None:
+            lines.append(f"budget:   ${self.objective.budget_usd:.2f} "
+                         f"({'OK' if self.feasible else 'VIOLATED'})")
+        if self.objective.deadline_s is not None:
+            lines.append(f"deadline: {self.objective.deadline_s / 3600.0:.2f} h"
+                         f" ({'OK' if self.feasible else 'VIOLATED'})")
+        if not self.feasible:
+            lines.append(f"INFEASIBLE: {self.reason}")
+        return "\n".join(lines)
+
+
+class RunPlanner:
+    """Global (asset, partition) -> platform assignment under an Objective."""
+
+    def __init__(self, graph: AssetGraph, factory: DynamicClientFactory,
+                 max_iterations: int = 1000):
+        self.graph = graph
+        self.factory = factory
+        self.max_iterations = max_iterations
+
+    # ------------------------------------------------------------- task DAG
+    def _tasks(self, targets: list[str] | None) -> tuple[
+            list[TaskKey], dict[TaskKey, list[TaskKey]]]:
+        """Topologically ordered task keys + predecessor edges."""
+        order = self.graph.topo_order(targets)
+        keys: list[TaskKey] = []
+        preds: dict[TaskKey, list[TaskKey]] = {}
+        for name in order:
+            spec = self.graph[name]
+            for key in partition_keys(spec.partitions):
+                tk = (name, key)
+                keys.append(tk)
+                preds[tk] = [
+                    (d, dk) for d in spec.deps
+                    for dk in dep_partition_keys(
+                        self.graph[d].partitions, key)]
+        return keys, preds
+
+    def _candidates(self, keys: list[TaskKey]) -> dict[
+            TaskKey, list[_Candidate]]:
+        """Feasible per-platform pricing; honors ``platform_hint`` pins.
+        Estimates depend on (asset, platform) only, so partitions of one
+        asset share a single priced candidate list."""
+        cm = self.factory.cost_model
+        by_asset: dict[str, list[_Candidate]] = {}
+        out: dict[TaskKey, list[_Candidate]] = {}
+        for name, _part in keys:
+            if name not in by_asset:
+                spec = self.graph[name]
+                cands = []
+                for pname, platform in self.factory.catalog.items():
+                    if spec.platform_hint and pname != spec.platform_hint:
+                        continue
+                    est = cm.estimate(spec, platform)
+                    if not est.feasible:
+                        continue
+                    cands.append(_Candidate(
+                        pname, est,
+                        cm.expected_cost_with_retries(est, platform),
+                        est.duration_s))
+                if not cands:
+                    raise RuntimeError(
+                        f"no feasible platform for asset {name!r}")
+                by_asset[name] = cands
+            out[(name, _part)] = by_asset[name]
+        return out
+
+    # ------------------------------------------------------------ schedule
+    @staticmethod
+    def _schedule(keys: list[TaskKey], preds: dict[TaskKey, list[TaskKey]],
+                  durations: dict[TaskKey, float]) -> _Schedule:
+        """Forward/backward critical-path pass (infinite-width PERT)."""
+        finish: dict[TaskKey, float] = {}
+        for tk in keys:  # keys are topo-ordered
+            start = max((finish[p] for p in preds[tk]), default=0.0)
+            finish[tk] = start + durations[tk]
+        makespan = max(finish.values(), default=0.0)
+        succs: dict[TaskKey, list[TaskKey]] = {tk: [] for tk in keys}
+        for tk in keys:
+            for p in preds[tk]:
+                succs[p].append(tk)
+        latest: dict[TaskKey, float] = {}
+        for tk in reversed(keys):
+            latest[tk] = min(
+                (latest[s] - durations[s] for s in succs[tk]),
+                default=makespan)
+        slack = {tk: latest[tk] - finish[tk] for tk in keys}
+        return _Schedule(makespan, finish, slack)
+
+    # ------------------------------------------------------------- assigns
+    @staticmethod
+    def _greedy_assignment(cands: dict[TaskKey, list[_Candidate]],
+                           objective: Objective) -> dict[TaskKey, _Candidate]:
+        """What per-task ``factory.choose`` would do — the baseline."""
+        tv = objective.time_value_usd_per_hour
+        return {tk: min(cs, key=lambda c: c.cost_usd
+                        + tv * c.duration_s / 3600.0)
+                for tk, cs in cands.items()}
+
+    @staticmethod
+    def _cheapest_assignment(cands: dict[TaskKey, list[_Candidate]]) -> dict[
+            TaskKey, _Candidate]:
+        return {tk: min(cs, key=lambda c: (c.cost_usd, c.duration_s))
+                for tk, cs in cands.items()}
+
+    @staticmethod
+    def _fastest_assignment(cands: dict[TaskKey, list[_Candidate]]) -> dict[
+            TaskKey, _Candidate]:
+        return {tk: min(cs, key=lambda c: (c.duration_s, c.cost_usd))
+                for tk, cs in cands.items()}
+
+    # ----------------------------------------------------------------- api
+    def plan(self, targets: list[str] | None = None,
+             objective: Objective | None = None) -> RunPlan:
+        obj = objective or self.factory.objective
+        keys, preds = self._tasks(targets)
+        cands = self._candidates(keys)
+        durations = lambda assign: {tk: c.duration_s  # noqa: E731
+                                    for tk, c in assign.items()}
+        total_cost = lambda assign: sum(  # noqa: E731
+            c.cost_usd for c in assign.values())
+
+        greedy = self._greedy_assignment(cands, obj)
+        greedy_sched = self._schedule(keys, preds, durations(greedy))
+        greedy_cost = total_cost(greedy)
+
+        # a plan must never be slower than greedy; a deadline tightens that
+        target_ms = greedy_sched.makespan_s
+        if obj.deadline_s is not None:
+            target_ms = min(target_ms, obj.deadline_s)
+
+        iters = 0
+        feasible, reason = True, ""
+
+        # provable lower bounds first: if even the extreme assignment cannot
+        # satisfy a constraint, no amount of reassignment will.
+        fastest_ms = self._schedule(
+            keys, preds, durations(self._fastest_assignment(cands))).makespan_s
+        cheapest = self._cheapest_assignment(cands)
+        min_cost = total_cost(cheapest)
+        if obj.deadline_s is not None and fastest_ms > obj.deadline_s:
+            feasible = False
+            reason = (f"deadline {obj.deadline_s:.0f}s infeasible: even the "
+                      f"fastest assignment needs {fastest_ms:.0f}s")
+        if obj.budget_usd is not None and min_cost > obj.budget_usd:
+            feasible = False
+            reason = (reason + "; " if reason else "") + (
+                f"budget ${obj.budget_usd:.2f} infeasible: even the cheapest "
+                f"assignment costs ${min_cost:.2f}")
+
+        # 1) start cheap, 2) buy back time on the critical path
+        assign = dict(cheapest)
+        sched = self._schedule(keys, preds, durations(assign))
+        while sched.makespan_s > target_ms and iters < self.max_iterations:
+            iters += 1
+            best: tuple[float, TaskKey, _Candidate] | None = None
+            for tk in keys:
+                if not sched.critical(tk):
+                    continue  # time-weighted moves only help on the path
+                cur = assign[tk]
+                for c in cands[tk]:
+                    saved = cur.duration_s - c.duration_s
+                    if saved <= 0:
+                        continue
+                    rate = saved / max(c.cost_usd - cur.cost_usd, 1e-9)
+                    if best is None or rate > best[0]:
+                        best = (rate, tk, c)
+            if best is None:
+                break  # no critical task can go faster
+            assign[best[1]] = best[2]
+            sched = self._schedule(keys, preds, durations(assign))
+
+        if sched.makespan_s > target_ms * (1 + 1e-9):
+            if obj.deadline_s is not None and feasible:
+                feasible = False
+                reason = (f"deadline {obj.deadline_s:.0f}s unmet: best "
+                          f"achievable makespan {sched.makespan_s:.0f}s")
+            # never return a plan slower than greedy
+            if sched.makespan_s > greedy_sched.makespan_s:
+                assign = dict(greedy)
+                sched = self._schedule(keys, preds, durations(assign))
+
+        # 3) spend slack: off-path tasks take the cheapest platform that
+        # keeps the makespan at (or under) the target — cost-weighted scoring
+        improved = True
+        while improved and iters < self.max_iterations:
+            improved = False
+            for tk in sorted(keys, key=lambda k: -sched.slack[k]):
+                cur = assign[tk]
+                for c in sorted(cands[tk], key=lambda c: c.cost_usd):
+                    if c.cost_usd >= cur.cost_usd:
+                        break
+                    if c.duration_s > cur.duration_s + sched.slack[tk]:
+                        continue  # cannot fit even in this task's slack
+                    trial = dict(assign)
+                    trial[tk] = c
+                    tsched = self._schedule(keys, preds, durations(trial))
+                    if tsched.makespan_s <= max(sched.makespan_s, target_ms) \
+                            * (1 + 1e-12):
+                        assign, sched = trial, tsched
+                        improved = True
+                        iters += 1
+                        break
+
+        cost = total_cost(assign)
+        if obj.budget_usd is not None and cost > obj.budget_usd and feasible:
+            feasible = False
+            reason = (f"budget ${obj.budget_usd:.2f} unmet at deadline: best "
+                      f"plan costs ${cost:.2f}")
+
+        choices = {
+            tk: PlannedChoice(
+                asset=tk[0], partition=tk[1], platform=c.platform,
+                estimate=c.estimate, expected_cost_usd=c.cost_usd,
+                critical=sched.critical(tk), slack_s=sched.slack[tk])
+            for tk, c in assign.items()}
+        return RunPlan(
+            objective=obj, choices=choices, predicted_cost_usd=cost,
+            predicted_makespan_s=sched.makespan_s,
+            greedy_cost_usd=greedy_cost,
+            greedy_makespan_s=greedy_sched.makespan_s,
+            feasible=feasible, reason=reason, iterations=iters)
+
+
+def plan_run(graph: AssetGraph, factory: DynamicClientFactory,
+             targets: list[str] | None = None,
+             objective: Objective | None = None) -> RunPlan:
+    """One-shot convenience wrapper around ``RunPlanner``."""
+    return RunPlanner(graph, factory).plan(targets, objective)

@@ -202,6 +202,42 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return cell
 
 
+def plan_preview(objective_name: str, time_value: float,
+                 budget_usd: float | None, deadline_h: float | None) -> None:
+    """Orchestration dry-run: global planner assignment for the paper's
+    Common-Crawl pipeline, printed as a per-task table with predicted cost
+    and makespan vs the greedy per-task factory — no jax work involved."""
+    from repro.core import (CostModel, DynamicClientFactory, Objective,
+                            RunPlanner, default_catalog)
+
+    try:
+        from benchmarks.cc_pipeline import SMALL, build_graph
+        graph, targets = build_graph(partitions=SMALL), ["graph_aggr"]
+    except ImportError:  # installed as a package without the benchmarks dir
+        from repro.core import AssetGraph, ComputeProfile, asset
+        a = asset(name="extract",
+                  compute=ComputeProfile(work_chip_hours=200.0,
+                                         speedup_class="scan"))(lambda ctx: 0)
+        b = asset(name="transform", deps=("extract",),
+                  compute=ComputeProfile(work_chip_hours=26.0,
+                                         speedup_class="shuffle"))(
+                      lambda ctx, extract: 0)
+        graph, targets = AssetGraph([a, b]), ["transform"]
+
+    objective = {
+        "min_cost": Objective.min_cost,
+        "min_time": Objective.min_time,
+        "balanced": lambda: Objective.balanced(time_value),
+    }[objective_name]().constrained(budget_usd=budget_usd,
+                                    deadline_s=None if deadline_h is None
+                                    else deadline_h * 3600.0)
+    factory = DynamicClientFactory(default_catalog(), CostModel(), objective)
+    plan = RunPlanner(graph, factory).plan(targets)
+    print(f"run plan ({objective.name}, "
+          f"{len(plan.choices)} tasks, {plan.iterations} iterations):")
+    print(plan.table())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None, help="one arch (default: all)")
@@ -210,7 +246,20 @@ def main() -> None:
                     choices=["single", "multi", "both"])
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--list", action="store_true")
+    ap.add_argument("--plan", action="store_true",
+                    help="print the DAG-level run-plan preview and exit")
+    ap.add_argument("--objective", default="balanced",
+                    choices=["min_cost", "min_time", "balanced"])
+    ap.add_argument("--time-value", type=float, default=60.0,
+                    help="USD/hour of wall-clock (balanced objective)")
+    ap.add_argument("--budget-usd", type=float, default=None)
+    ap.add_argument("--deadline-h", type=float, default=None)
     args = ap.parse_args()
+
+    if args.plan:
+        plan_preview(args.objective, args.time_value, args.budget_usd,
+                     args.deadline_h)
+        return
 
     if args.list:
         for a in list_configs():

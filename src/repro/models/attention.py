@@ -13,7 +13,6 @@ always computed from true token positions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

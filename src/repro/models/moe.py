@@ -19,7 +19,6 @@ through), matching GShard semantics.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

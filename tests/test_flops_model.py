@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.launch import flops as flops_mod
+from repro.launch.analysis import safe_cost_analysis
 from repro.launch.dryrun import make_train_step
 from repro.models import LanguageModel
 from repro.optim import AdamW, OptConfig
@@ -33,7 +34,9 @@ def test_analytic_flops_within_band_of_hlo():
     }
     compiled = jax.jit(make_train_step(model, opt)).lower(
         params, osd, batch).compile()
-    hlo_flops = compiled.cost_analysis().get("flops", 0.0)
+    # jaxlib returns a dict or a one-element list depending on version —
+    # safe_cost_analysis normalizes both (same helper the dry-run uses)
+    hlo_flops = safe_cost_analysis(compiled).get("flops", 0.0)
     analytic = flops_mod.step_flops(cfg, shape)
     assert hlo_flops > 0
     # analytic assumes causal-efficient attention (S/2) and skips elementwise

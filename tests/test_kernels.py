@@ -1,7 +1,5 @@
 """Pallas kernel validation: shape/dtype sweeps, interpret-mode kernel vs the
 pure-jnp oracle (assignment requirement: per-kernel allclose against ref.py)."""
-import itertools
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -10,7 +10,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 
 def run_sub(code: str, devices: int = 8, timeout: int = 560) -> str:

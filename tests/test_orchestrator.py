@@ -1,7 +1,5 @@
 """Orchestrator behaviour: DAG scheduling, caching, retries/failover,
 straggler speculation, cost accounting, partitions."""
-import threading
-
 import numpy as np
 import pytest
 

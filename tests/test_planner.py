@@ -1,0 +1,192 @@
+"""DAG-level run planner: critical-path extraction, budget/deadline
+constraints (including proven infeasibility), dominance over the greedy
+per-task factory, and the coordinator integration with greedy fallback."""
+import pytest
+
+from repro.core import (AssetGraph, ComputeProfile, CostModel,
+                        DynamicClientFactory, MessageReader, Objective,
+                        RetryPolicy, RunCoordinator,
+                        SimulatedClusterClient, StaticPartitions, asset,
+                        default_catalog, plan_run)
+
+
+def _spec(name, work, deps=(), cls="scan", min_chips=8, parts=None,
+          retry=None, hint=None):
+    return asset(name=name, deps=deps, partitions=parts,
+                 retry=retry or RetryPolicy(),
+                 platform_hint=hint,
+                 compute=ComputeProfile(work_chip_hours=work,
+                                        speedup_class=cls,
+                                        min_chips=min_chips))(
+        lambda ctx, **kw: name)
+
+
+def fanout_graph(heavy=400.0, light=40.0, width=5):
+    """src -> b0(heavy), b1..b{width-1}(light) -> sink."""
+    specs = [_spec("src", 5.0)]
+    for i in range(width):
+        specs.append(_spec(f"b{i}", heavy if i == 0 else light,
+                           deps=("src",)))
+    specs.append(_spec("sink", 5.0, cls="light",
+                       deps=tuple(f"b{i}" for i in range(width))))
+    return AssetGraph(specs), ["sink"]
+
+
+def make_factory(objective=None):
+    return DynamicClientFactory(default_catalog(), CostModel(),
+                                objective or Objective.balanced(600.0))
+
+
+def nofail_factory(objective=None):
+    return DynamicClientFactory(
+        default_catalog(), CostModel(),
+        objective or Objective.balanced(600.0),
+        client_builder=lambda p: SimulatedClusterClient(
+            p, seed=0, failure_rate=0.0, preemption_rate=0.0))
+
+
+# --------------------------------------------------------- critical path
+def test_chain_is_entirely_critical():
+    a = _spec("a", 50.0)
+    b = _spec("b", 50.0, deps=("a",))
+    c = _spec("c", 50.0, deps=("b",))
+    plan = plan_run(AssetGraph([a, b, c]), make_factory(), ["c"])
+    assert all(ch.critical for ch in plan.choices.values())
+    assert all(ch.slack_s == pytest.approx(0.0, abs=1e-6)
+               for ch in plan.choices.values())
+
+
+def test_fanout_critical_path_is_heavy_branch():
+    g, targets = fanout_graph()
+    plan = plan_run(g, make_factory(), targets)
+    assert plan.choice("b0", "__all__").critical
+    for i in range(1, 5):
+        ch = plan.choice(f"b{i}", "__all__")
+        assert not ch.critical
+        assert ch.slack_s > 0.0
+    # src and sink bound every path, so they are critical too
+    assert plan.choice("src", "__all__").critical
+    assert plan.choice("sink", "__all__").critical
+
+
+def test_partitioned_tasks_are_planned_per_partition():
+    parts = StaticPartitions(("p0", "p1"))
+    shards = _spec("shards", 50.0, parts=parts)
+    merged = _spec("merged", 10.0, deps=("shards",), cls="light")
+    plan = plan_run(AssetGraph([shards, merged]), make_factory(), ["merged"])
+    assert set(plan.choices) == {("shards", "p0"), ("shards", "p1"),
+                                 ("merged", "__all__")}
+
+
+def test_platform_hint_is_pinned():
+    a = _spec("a", 50.0, hint="pod-premium")
+    plan = plan_run(AssetGraph([a]), make_factory(Objective.min_cost()))
+    assert plan.choice("a", "__all__").platform == "pod-premium"
+
+
+# ----------------------------------------------------------- constraints
+def test_budget_infeasible_plan():
+    g, targets = fanout_graph()
+    obj = Objective.min_cost().constrained(budget_usd=0.01)
+    plan = plan_run(g, make_factory(obj), targets)
+    assert not plan.feasible
+    assert "budget" in plan.reason
+    # the coordinator refuses to execute a plan that is proven infeasible
+    coord = RunCoordinator(g, nofail_factory(obj), use_cache=False)
+    with pytest.raises(ValueError, match="infeasible"):
+        coord.materialize(targets, plan=plan)
+
+
+def test_deadline_infeasible_plan():
+    g, targets = fanout_graph()
+    obj = Objective.min_time().constrained(deadline_s=60.0)
+    plan = plan_run(g, make_factory(obj), targets)
+    assert not plan.feasible
+    assert "deadline" in plan.reason
+
+
+def test_deadline_buys_speed_on_critical_path_only():
+    """min_cost alone picks cheap platforms; with a deadline the planner
+    must upgrade the critical path while leaving slack tasks cheap."""
+    g, targets = fanout_graph()
+    free = plan_run(g, make_factory(Objective.min_cost()), targets)
+    deadline = free.predicted_makespan_s * 0.8
+    obj = Objective.min_cost().constrained(deadline_s=deadline)
+    plan = plan_run(g, make_factory(obj), targets)
+    assert plan.feasible
+    assert plan.predicted_makespan_s <= deadline * (1 + 1e-9)
+    assert plan.predicted_cost_usd >= free.predicted_cost_usd - 1e-9
+
+
+def test_budget_feasible_plan_respects_budget():
+    g, targets = fanout_graph()
+    base = plan_run(g, make_factory(Objective.min_cost()), targets)
+    obj = Objective.min_cost().constrained(
+        budget_usd=base.predicted_cost_usd * 1.5)
+    plan = plan_run(g, make_factory(obj), targets)
+    assert plan.feasible
+    assert plan.predicted_cost_usd <= obj.budget_usd
+
+
+# ------------------------------------------------------------- dominance
+def test_planned_dominates_greedy_predicted():
+    g, targets = fanout_graph()
+    plan = plan_run(g, make_factory(), targets)
+    assert plan.predicted_cost_usd <= plan.greedy_cost_usd + 1e-9
+    assert plan.predicted_makespan_s <= plan.greedy_makespan_s + 1e-9
+    # the fan-out shape has real slack, so the planner must find savings
+    assert plan.predicted_cost_usd < plan.greedy_cost_usd
+
+
+def test_e2e_planned_run_cost_leq_greedy():
+    """Fan-out/fan-in executed through the coordinator with deterministic
+    simulated clients: the planned run must not cost more than greedy."""
+    g, targets = fanout_graph()
+    obj = Objective.balanced(600.0)
+
+    coord_g = RunCoordinator(g, nofail_factory(obj), use_cache=False)
+    greedy_rep = coord_g.materialize(targets, run_id="e2e-fixed")
+    assert greedy_rep.ok
+
+    coord_p = RunCoordinator(g, nofail_factory(obj), use_cache=False)
+    plan = coord_p.plan(targets)
+    planned_rep = coord_p.materialize(targets, run_id="e2e-fixed", plan=plan)
+    assert planned_rep.ok
+    assert planned_rep.total_cost <= greedy_rep.total_cost + 1e-6
+    # every task ran on exactly the planned platform (no failures injected)
+    for rec in planned_rep.records:
+        assert rec.platform == plan.choice(rec.asset, rec.partition).platform
+
+
+def test_plan_table_lists_every_task_and_totals():
+    g, targets = fanout_graph()
+    plan = plan_run(g, make_factory(), targets)
+    table = plan.table()
+    for (a, p) in plan.choices:
+        assert f"{a}[{p}]" in table
+    assert "planned:" in table and "greedy:" in table
+
+
+# ---------------------------------------------------- coordinator fallback
+def test_planned_run_falls_back_to_greedy_on_failover():
+    """If the planned platform keeps failing, failover deny-lists it and the
+    factory's greedy choose takes over — the run must still succeed."""
+    retry = RetryPolicy(max_attempts=6, backoff_s=0.0, failover_after=2)
+    a = _spec("solo", 50.0, retry=retry)
+    g = AssetGraph([a])
+    factory = DynamicClientFactory(
+        default_catalog(), CostModel(), Objective.min_cost(),
+        client_builder=lambda p: SimulatedClusterClient(
+            p, seed=0,
+            failure_rate=1.0 if p.name == "pod-spot" else 0.0,
+            preemption_rate=0.0))
+    reader = MessageReader()
+    coord = RunCoordinator(g, factory, reader=reader, use_cache=False)
+    plan = coord.plan(["solo"])
+    assert plan.choice("solo", "__all__").platform == "pod-spot"
+    report = coord.materialize(["solo"], plan=plan)
+    assert report.ok
+    rec = report.records[0]
+    assert rec.attempts[0].platform == "pod-spot"
+    assert rec.attempts[-1].platform != "pod-spot"
+    assert reader.events(kind="FAILOVER")

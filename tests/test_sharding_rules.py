@@ -2,10 +2,9 @@
 spec construction — the invariants the whole distribution layer rests on."""
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import MeshInfo, constrain, use_mesh_info
+from repro.distributed.sharding import MeshInfo, constrain
 
 
 class FakeMesh:
