@@ -1,0 +1,95 @@
+"""CI gate: compare a fresh BENCH_planner_scale.json against the committed
+baseline and fail on plan-time regression.
+
+Usage (what .github/workflows/ci.yml runs after ``planner_scale.py --smoke``):
+
+    python benchmarks/check_planner_regression.py \
+        --current BENCH_planner_scale.json \
+        --baseline benchmarks/baselines/planner_scale_baseline.json \
+        --size 1000 --max-ratio 1.5
+
+Every DAG shape present in both files is checked at ``--size``.  Raw
+wall-clock is machine-dependent (CI runners are slower than the machine
+that recorded the baseline), so the gate compares the *normalized* plan
+time — ``new.plan_time_s / legacy.plan_time_s`` — against the baseline's
+normalized value: the legacy planner runs in the same process on the same
+hardware, so machine speed cancels and only genuine planner regressions
+move the ratio.  Sub-100ms cells still jitter (scheduler, GC), so a
+regression additionally requires the raw plan time to exceed the baseline
+by ``--min-delta-s``: the gate exists to catch the legacy planner's
+quadratic blowup (~0.03s -> seconds at 1,000 tasks), not 40ms of noise.
+The quality booleans (``cost_ok`` / ``makespan_ok``) from the current run
+must all hold too — a fast planner shipping worse plans is still a
+regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_planner_scale.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/planner_scale_baseline.json")
+    ap.add_argument("--size", type=int, default=1000)
+    ap.add_argument("--max-ratio", type=float, default=1.5)
+    ap.add_argument("--min-delta-s", type=float, default=0.25,
+                    help="absolute raw plan-time excess a regression must "
+                         "also show (noise floor for sub-100ms cells)")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    size = str(args.size)
+    failures: list[str] = []
+    checked = 0
+    for shape, cells in sorted(base["shapes"].items()):
+        if size not in cells or shape not in cur["shapes"] \
+                or size not in cur["shapes"][shape]:
+            continue
+        b_cell = cells[size]
+        c_cell = cur["shapes"][shape][size]
+        b = b_cell["new"]["plan_time_s"] / max(
+            b_cell["legacy"]["plan_time_s"], 1e-9)
+        c = c_cell["new"]["plan_time_s"] / max(
+            c_cell["legacy"]["plan_time_s"], 1e-9)
+        ratio = c / max(b, 1e-9)
+        raw_delta = (c_cell["new"]["plan_time_s"]
+                     - b_cell["new"]["plan_time_s"])
+        regressed = ratio > args.max_ratio and raw_delta > args.min_delta_s
+        status = "REGRESSION" if regressed else "OK"
+        print(f"{shape:>18} @ {size}: normalized plan time "
+              f"baseline {b:.3f} -> current {c:.3f} ({ratio:.2f}x) {status} "
+              f"[raw {c_cell['new']['plan_time_s']:.3f}s, "
+              f"delta {raw_delta:+.3f}s]")
+        checked += 1
+        if regressed:
+            failures.append(
+                f"{shape}@{size}: normalized plan time {c:.3f} is "
+                f"{ratio:.2f}x the baseline {b:.3f} (max {args.max_ratio}x) "
+                f"and raw time grew {raw_delta:+.3f}s "
+                f"(floor {args.min_delta_s}s)")
+        for flag in ("cost_ok", "makespan_ok"):
+            if flag in c_cell and not c_cell[flag]:
+                failures.append(f"{shape}@{size}: {flag} is false — the "
+                                f"plan regressed vs the legacy reference")
+    if checked == 0:
+        failures.append(f"no comparable cells at size {size} — baseline or "
+                        f"current file malformed?")
+    if failures:
+        print("\n".join(["PLANNER BENCH REGRESSION:"] + failures),
+              file=sys.stderr)
+        return 1
+    print(f"planner bench OK: {checked} shapes within "
+          f"{args.max_ratio}x of baseline at {size} tasks")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

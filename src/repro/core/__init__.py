@@ -13,5 +13,7 @@ from repro.core.partitions import (MultiPartitions, PartitionsDefinition,  # noq
 from repro.core.planner import (PlannedChoice, RunPlan, RunPlanner,  # noqa: F401
                                 plan_run)
 from repro.core.platforms import Platform, default_catalog  # noqa: F401
+from repro.core.schedule import (ScheduleEngine, SlotConfig,  # noqa: F401
+                                 SlotSchedule, task_dag)
 from repro.core.store import MaterializationStore  # noqa: F401
 from repro.core.telemetry import Event, MessageReader  # noqa: F401

@@ -22,6 +22,7 @@ from repro.core.costmodel import CostEstimate
 from repro.core.factory import DynamicClientFactory
 from repro.core.partitions import dep_partition_keys, partition_keys
 from repro.core.planner import RunPlan, RunPlanner
+from repro.core.schedule import ScheduleEngine, SlotConfig, task_dag
 from repro.core.store import MaterializationStore
 from repro.core.telemetry import MessageReader
 
@@ -53,6 +54,15 @@ class TaskRecord:
         return sum(a.sim_duration_s for a in self.attempts)
 
     @property
+    def serial_sim_s(self) -> float:
+        """Wall-clock the task occupied its slot chain: retries serialize,
+        but a speculative twin that *lost* ran concurrently with the primary
+        and must not be double-counted (a twin that won is the attempt the
+        task finished on, so it stays)."""
+        return sum(a.sim_duration_s for a in self.attempts
+                   if not (a.speculative and a.status != "success"))
+
+    @property
     def total_cost(self) -> float:
         return sum(a.cost_usd for a in self.attempts)
 
@@ -70,6 +80,26 @@ class RunReport:
     @property
     def total_cost(self) -> float:
         return sum(r.total_cost for r in self.records)
+
+    def slot_makespan_s(self, slots: SlotConfig | None = None) -> float:
+        """Slot-aware simulated makespan: replay the recorded attempt
+        durations (retries serialize within a task) through the same
+        finite-capacity list scheduler the planner predicts with, on the
+        platform each task actually ran on.  This is the number a planner
+        prediction should match under contention."""
+        if not self.records:
+            return 0.0
+        recs = {(r.asset, r.partition): r for r in self.records}
+        keys, preds = task_dag(self.graph,
+                               sorted({r.asset for r in self.records}))
+        keys = [k for k in keys if k in recs]
+        engine = ScheduleEngine(
+            keys, {k: [p for p in preds[k] if p in recs] for k in keys},
+            slots)
+        engine.load([recs[k].serial_sim_s for k in keys],
+                    [recs[k].platform or "local" for k in keys])
+        return engine.slot_schedule().makespan_s if slots is not None \
+            else engine.makespan_s
 
     def makespan_s(self) -> float:
         """Critical-path simulated duration through the (asset, partition) DAG."""
@@ -137,7 +167,8 @@ class RunCoordinator:
                  straggler_factor: float = 2.5,
                  straggler_min_s: float = 0.05,
                  enable_speculation: bool = True,
-                 use_cache: bool = True):
+                 use_cache: bool = True,
+                 slots: SlotConfig | None = None):
         graph.validate()
         self.graph = graph
         self.factory = factory
@@ -145,19 +176,51 @@ class RunCoordinator:
         self.reader = reader or MessageReader()
         self.injector = injector or ContextInjector(reader=self.reader)
         self.injector.reader = self.reader
-        self.max_concurrent = max_concurrent
-        self.platform_slots = platform_slots
-        self.elastic_max_slots = elastic_max_slots
+        # one slot configuration drives both execution (this class) and the
+        # planner's finite-capacity schedule, so plan and run agree on what
+        # a slot is; ``slots`` wins over the legacy per-field kwargs
+        self.slots = slots or SlotConfig(max_concurrent=max_concurrent,
+                                         platform_slots=platform_slots,
+                                         elastic_max_slots=elastic_max_slots)
         self.straggler_factor = straggler_factor
         self.straggler_min_s = straggler_min_s
         self.enable_speculation = enable_speculation
         self.use_cache = use_cache
+        self._dep_key_cache: dict[tuple[str, str], list[str]] = {}
+
+    # legacy attribute style stays writable, but reads/writes go through
+    # self.slots so the launch loop and plan() can never disagree
+    @property
+    def max_concurrent(self) -> int:
+        return self.slots.max_concurrent
+
+    @max_concurrent.setter
+    def max_concurrent(self, v: int) -> None:
+        self.slots = dataclasses.replace(self.slots, max_concurrent=v)
+
+    @property
+    def platform_slots(self) -> int:
+        return self.slots.platform_slots
+
+    @platform_slots.setter
+    def platform_slots(self, v: int) -> None:
+        self.slots = dataclasses.replace(self.slots, platform_slots=v)
+
+    @property
+    def elastic_max_slots(self) -> int:
+        return self.slots.elastic_max_slots
+
+    @elastic_max_slots.setter
+    def elastic_max_slots(self, v: int) -> None:
+        self.slots = dataclasses.replace(self.slots, elastic_max_slots=v)
 
     # ------------------------------------------------------------------ api
     def plan(self, targets: list[str] | None = None,
              objective=None) -> RunPlan:
-        """Global cost/deadline-aware platform assignment (see planner.py)."""
-        return RunPlanner(self.graph, self.factory).plan(targets, objective)
+        """Global cost/deadline-aware platform assignment (see planner.py),
+        predicted under this coordinator's own slot configuration."""
+        return RunPlanner(self.graph, self.factory,
+                          slots=self.slots).plan(targets, objective)
 
     def materialize(self, targets: list[str] | None = None,
                     run_id: str | None = None,
@@ -341,7 +404,13 @@ class RunCoordinator:
 
     # ------------------------------------------------------------ internals
     def _dep_keys(self, dspec: AssetSpec, partition: str) -> list[str]:
-        return dep_partition_keys(dspec.partitions, partition)
+        # memoized: called from every deps_ready poll in the launch loop
+        ck = (dspec.name, partition)
+        out = self._dep_key_cache.get(ck)
+        if out is None:
+            out = dep_partition_keys(dspec.partitions, partition)
+            self._dep_key_cache[ck] = out
+        return out
 
     def _maybe_speculate(self, run_id: str, t: _Task) -> None:
         if (not self.enable_speculation or t.spec_handle is not None

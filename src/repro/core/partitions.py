@@ -74,10 +74,16 @@ def partition_keys(p: PartitionsDefinition | None) -> list[str]:
 
 
 def dep_partition_keys(dep: PartitionsDefinition | None,
-                       partition: str) -> list[str]:
+                       partition: str,
+                       dkeys: list[str] | None = None) -> list[str]:
     """Which upstream partitions a task with ``partition`` consumes: the
-    matching key when partitionings align, every key on fan-in."""
-    dkeys = partition_keys(dep)
+    matching key when partitionings align, every key on fan-in.
+
+    ``dkeys`` lets hot callers (``schedule.task_dag`` expands 10k-task DAGs)
+    pass the upstream's already-expanded ``partition_keys`` so it is not
+    recomputed per task; semantics are identical."""
+    if dkeys is None:
+        dkeys = partition_keys(dep)
     if partition in dkeys:
         return [partition]
     if dkeys == ["__all__"]:

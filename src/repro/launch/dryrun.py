@@ -203,12 +203,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def plan_preview(objective_name: str, time_value: float,
-                 budget_usd: float | None, deadline_h: float | None) -> None:
+                 budget_usd: float | None, deadline_h: float | None,
+                 plan_rows: int = 50) -> None:
     """Orchestration dry-run: global planner assignment for the paper's
-    Common-Crawl pipeline, printed as a per-task table with predicted cost
-    and makespan vs the greedy per-task factory — no jax work involved."""
+    Common-Crawl pipeline, printed as a per-task table (truncated past
+    ``plan_rows`` tasks with a per-asset/platform summary) with predicted
+    cost, slot contention and makespan vs the greedy per-task factory — no
+    jax work involved."""
     from repro.core import (CostModel, DynamicClientFactory, Objective,
-                            RunPlanner, default_catalog)
+                            RunPlanner, SlotConfig, default_catalog)
 
     try:
         from benchmarks.cc_pipeline import SMALL, build_graph
@@ -232,10 +235,12 @@ def plan_preview(objective_name: str, time_value: float,
                                     deadline_s=None if deadline_h is None
                                     else deadline_h * 3600.0)
     factory = DynamicClientFactory(default_catalog(), CostModel(), objective)
-    plan = RunPlanner(graph, factory).plan(targets)
+    # the default SlotConfig matches RunCoordinator's execution limits, so
+    # the previewed makespan accounts for finite per-platform slots
+    plan = RunPlanner(graph, factory, slots=SlotConfig()).plan(targets)
     print(f"run plan ({objective.name}, "
           f"{len(plan.choices)} tasks, {plan.iterations} iterations):")
-    print(plan.table())
+    print(plan.table(max_rows=plan_rows))
 
 
 def main() -> None:
@@ -254,11 +259,14 @@ def main() -> None:
                     help="USD/hour of wall-clock (balanced objective)")
     ap.add_argument("--budget-usd", type=float, default=None)
     ap.add_argument("--deadline-h", type=float, default=None)
+    ap.add_argument("--plan-rows", type=int, default=50,
+                    help="max per-task rows in the --plan table before "
+                         "truncating to a per-asset/platform summary")
     args = ap.parse_args()
 
     if args.plan:
         plan_preview(args.objective, args.time_value, args.budget_usd,
-                     args.deadline_h)
+                     args.deadline_h, plan_rows=args.plan_rows)
         return
 
     if args.list:

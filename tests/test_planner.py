@@ -1,6 +1,7 @@
 """DAG-level run planner: critical-path extraction, budget/deadline
 constraints (including proven infeasibility), dominance over the greedy
-per-task factory, and the coordinator integration with greedy fallback."""
+per-task factory, slot-aware makespan agreement with the coordinator, and
+the coordinator integration with greedy fallback."""
 import pytest
 
 from repro.core import (AssetGraph, ComputeProfile, CostModel,
@@ -165,6 +166,76 @@ def test_plan_table_lists_every_task_and_totals():
     for (a, p) in plan.choices:
         assert f"{a}[{p}]" in table
     assert "planned:" in table and "greedy:" in table
+
+
+# -------------------------------------------------- slot-aware agreement
+class _NoJitterClient(SimulatedClusterClient):
+    """Deterministic durations: the lognormal jitter draw is pinned to 1.0
+    so recorded sim durations equal the cost-model estimates exactly."""
+
+    class _Rng:
+        @staticmethod
+        def normal(*a, **kw):
+            return 0.0
+
+        @staticmethod
+        def uniform(*a, **kw):
+            return 0.999
+
+    def _rng(self, ctx):
+        return self._Rng()
+
+
+def contended_fanout(width=24, work=60.0):
+    """Far more parallel branches than slots: contention decides makespan."""
+    specs = [_spec("src", 2.0)]
+    for i in range(width):
+        specs.append(_spec(f"b{i:02d}", work, deps=("src",)))
+    specs.append(_spec("sink", 2.0, cls="light",
+                       deps=tuple(f"b{i:02d}" for i in range(width))))
+    return AssetGraph(specs), ["sink"]
+
+
+def test_planner_makespan_within_5pct_of_coordinator_simulated():
+    """Acceptance: planner and coordinator consume the same SlotConfig, and
+    the planner's slot-aware predicted makespan lands within 5% of the
+    makespan the coordinator's execution actually realizes (attempt
+    durations + platforms replayed through the shared slot model)."""
+    from repro.core import SlotConfig
+
+    g, targets = contended_fanout()
+    factory = DynamicClientFactory(
+        default_catalog(), CostModel(), Objective.balanced(600.0),
+        client_builder=lambda p: _NoJitterClient(
+            p, failure_rate=0.0, preemption_rate=0.0))
+    slots = SlotConfig(max_concurrent=8, platform_slots=2,
+                       elastic_max_slots=8)
+    coord = RunCoordinator(g, factory, slots=slots,
+                           enable_speculation=False, use_cache=False)
+    plan = coord.plan(targets)
+    # the DAG really contends: some platform saturates its slot budget
+    assert any(peak >= slots.capacity(name)
+               for name, peak in plan.platform_peaks.items())
+    report = coord.materialize(targets, run_id="slot-agree", plan=plan)
+    assert report.ok
+    actual = report.slot_makespan_s(coord.slots)
+    assert actual > 0
+    assert abs(plan.predicted_makespan_s - actual) <= 0.05 * actual
+    # and the infinite-width view provably underestimates under contention —
+    # the gap the slot-aware engine exists to close
+    assert report.slot_makespan_s(None) < actual
+
+
+def test_slot_prediction_exceeds_infinite_width_bound():
+    from repro.core import SlotConfig
+
+    g, targets = contended_fanout()
+    plan = plan_run(g, make_factory(), targets)
+    assert plan.predicted_makespan_s >= plan.pert_makespan_s * 2.0
+    wide = plan_run(g, make_factory(), targets,
+                    slots=SlotConfig(max_concurrent=64,
+                                     elastic_max_slots=64))
+    assert wide.predicted_makespan_s <= plan.predicted_makespan_s + 1e-9
 
 
 # ---------------------------------------------------- coordinator fallback

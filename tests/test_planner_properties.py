@@ -1,0 +1,131 @@
+"""Hypothesis property tests for the planner + scheduling engine.
+
+Skipped as a module (not a collection error) when the ``hypothesis`` dev
+extra is not installed, mirroring tests/test_properties.py.
+
+Properties:
+
+* dominance — over random DAGs, whenever the planner's slot-aware makespan
+  is <= greedy's, its cost is <= greedy's too (the planner contract);
+* slot monotonicity — on fan-out-structured DAGs (independent branches
+  between chokepoints) the slot-aware makespan is monotone non-increasing
+  as slot width grows.  (On arbitrary precedence graphs greedy list
+  scheduling admits Graham anomalies, so full generality gets the provable
+  (2 - 1/m) Graham envelope instead.)
+* incremental retiming equals full recomputation on random DAGs.
+"""
+import string
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra not installed")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (AssetGraph, ComputeProfile, CostModel,  # noqa: E402
+                        DynamicClientFactory, Objective, RunPlanner,
+                        ScheduleEngine, SlotConfig, asset, default_catalog)
+
+names = st.lists(st.text(alphabet=string.ascii_lowercase, min_size=1,
+                         max_size=5), min_size=1, max_size=9, unique=True)
+works = st.floats(1.0, 500.0)
+
+
+def _factory(tv=600.0):
+    return DynamicClientFactory(default_catalog(), CostModel(),
+                                Objective.balanced(tv))
+
+
+def _random_graph(ns, data):
+    specs = []
+    for i, n in enumerate(ns):
+        possible = ns[:i]
+        deps = tuple(data.draw(st.lists(st.sampled_from(possible),
+                                        max_size=min(3, len(possible)),
+                                        unique=True))) if possible else ()
+        specs.append(asset(
+            name=n, deps=deps,
+            compute=ComputeProfile(
+                work_chip_hours=data.draw(works),
+                speedup_class=data.draw(
+                    st.sampled_from(["scan", "shuffle", "light"])),
+                min_chips=8))(lambda ctx, **kw: None))
+    return AssetGraph(specs)
+
+
+@given(names, st.data())
+@settings(max_examples=25, deadline=None)
+def test_plan_cost_leq_greedy_when_makespan_leq_greedy(ns, data):
+    g = _random_graph(ns, data)
+    plan = RunPlanner(g, _factory(), slots=SlotConfig()).plan()
+    assert plan.feasible
+    if plan.predicted_makespan_s <= plan.greedy_makespan_s * (1 + 1e-9):
+        assert plan.predicted_cost_usd <= plan.greedy_cost_usd * (1 + 1e-9)
+    # and with no deadline the planner must always stay in the envelope
+    assert plan.predicted_makespan_s <= plan.greedy_makespan_s * (1 + 1e-9)
+
+
+@given(st.integers(2, 24), st.data())
+@settings(max_examples=25, deadline=None)
+def test_slot_makespan_monotone_in_width_on_fanout(width, data):
+    durs = [data.draw(st.floats(0.1, 10.0)) for _ in range(width)]
+    keys = [("src", "__all__")] + \
+        [(f"b{i:03d}", "__all__") for i in range(width)] + \
+        [("sink", "__all__")]
+    preds = {("src", "__all__"): []}
+    for i in range(width):
+        preds[(f"b{i:03d}", "__all__")] = [("src", "__all__")]
+    preds[("sink", "__all__")] = [(f"b{i:03d}", "__all__")
+                                  for i in range(width)]
+    all_durs = [1.0] + durs + [1.0]
+    prev = None
+    for w in (1, 2, 4, 8, 32):
+        e = ScheduleEngine(keys, preds,
+                           SlotConfig(max_concurrent=64,
+                                      elastic_max_slots=w))
+        e.load(list(all_durs), ["p"] * len(keys))
+        ms = e.slot_schedule().makespan_s
+        if prev is not None:
+            assert ms <= prev + 1e-9
+        prev = ms
+
+
+@given(names, st.data())
+@settings(max_examples=20, deadline=None)
+def test_slot_makespan_graham_envelope_on_random_dags(ns, data):
+    """For arbitrary precedence, growing width from m1 to m2 >= m1 keeps the
+    list-scheduled makespan within the provable Graham factor (2 - 1/m2) of
+    the narrower schedule (anomalies exist, unbounded regressions do not)."""
+    g = _random_graph(ns, data)
+    from repro.core import task_dag
+    keys, preds = task_dag(g, None)
+    durs = [data.draw(st.floats(0.1, 10.0)) for _ in keys]
+    ms = {}
+    for w in (2, 4, 8):
+        e = ScheduleEngine(keys, preds,
+                           SlotConfig(max_concurrent=64,
+                                      elastic_max_slots=w))
+        e.load(list(durs), ["p"] * len(keys))
+        ms[w] = e.slot_schedule().makespan_s
+    assert ms[4] <= ms[2] * (2 - 1 / 4) + 1e-9
+    assert ms[8] <= ms[4] * (2 - 1 / 8) + 1e-9
+
+
+@given(names, st.data())
+@settings(max_examples=20, deadline=None)
+def test_incremental_retime_equals_full_pass(ns, data):
+    g = _random_graph(ns, data)
+    from repro.core import task_dag
+    keys, preds = task_dag(g, None)
+    durs = [data.draw(st.floats(0.1, 10.0)) for _ in keys]
+    e = ScheduleEngine(keys, preds)
+    e.load(list(durs))
+    for _ in range(5):
+        i = data.draw(st.integers(0, len(keys) - 1))
+        durs[i] = data.draw(st.floats(0.1, 10.0))
+        e.set_duration(i, durs[i])
+        ref = ScheduleEngine(keys, preds)
+        ref.load(list(durs))
+        assert e.makespan_s == pytest.approx(ref.makespan_s)
+        assert np.allclose(e.slack(), ref.slack())

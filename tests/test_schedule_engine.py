@@ -1,0 +1,292 @@
+"""Scheduling-engine unit tests: PERT forward/backward passes, O(cone)
+incremental retiming equivalence, finite-capacity list scheduling (slots=1
+serialization, capacity effects), vectorized pricing parity, and the
+planner edge cases (empty DAG, single task, all-critical chain)."""
+import numpy as np
+import pytest
+
+from repro.core import (AssetGraph, ComputeProfile, CostModel,
+                        DynamicClientFactory, Objective, RunPlanner,
+                        ScheduleEngine, SlotConfig, asset, default_catalog,
+                        plan_run, task_dag)
+
+
+def _eng(edges: dict[str, list[str]], slots=None) -> ScheduleEngine:
+    """Engine from {task: [preds]} over single-partition keys."""
+    names = list(edges)
+    keys = [(n, "__all__") for n in names]
+    preds = {(n, "__all__"): [(p, "__all__") for p in edges[n]]
+             for n in names}
+    return ScheduleEngine(keys, preds, slots)
+
+
+def _spec(name, work, deps=(), parts=None, hint=None):
+    return asset(name=name, deps=deps, partitions=parts, platform_hint=hint,
+                 compute=ComputeProfile(work_chip_hours=work, min_chips=8))(
+        lambda ctx, **kw: name)
+
+
+def make_factory(objective=None):
+    return DynamicClientFactory(default_catalog(), CostModel(),
+                                objective or Objective.balanced(600.0))
+
+
+# ------------------------------------------------------------ PERT passes
+def test_forward_backward_chain():
+    e = _eng({"a": [], "b": ["a"], "c": ["b"]})
+    e.load([1.0, 2.0, 3.0])
+    assert e.makespan_s == 6.0
+    assert np.allclose(e.slack(), 0.0)
+    assert e.critical_mask().all()
+
+
+def test_fanout_slack():
+    e = _eng({"src": [], "big": ["src"], "small": ["src"],
+              "sink": ["big", "small"]})
+    e.load([1.0, 10.0, 2.0, 1.0])
+    assert e.makespan_s == 12.0
+    slack = dict(zip([k[0] for k in e.keys], e.slack()))
+    assert slack["big"] == 0.0 and slack["src"] == 0.0 and slack["sink"] == 0.0
+    assert slack["small"] == pytest.approx(8.0)
+
+
+def test_incremental_retime_matches_full_recompute():
+    """Random-ish DAG: every set_duration must leave finish/makespan equal
+    to a from-scratch forward pass."""
+    rng = np.random.RandomState(7)
+    n = 60
+    edges = {"t0": []}
+    for i in range(1, n):
+        k = rng.randint(0, min(i, 4))
+        preds = sorted(rng.choice(i, size=k, replace=False).tolist())
+        edges[f"t{i}"] = [f"t{p}" for p in preds]
+    e = _eng(edges)
+    durs = rng.uniform(0.5, 5.0, size=n).tolist()
+    e.load(list(durs))
+    ref = _eng(edges)
+    for _ in range(100):
+        i = int(rng.randint(0, n))
+        durs[i] = float(rng.uniform(0.1, 8.0))
+        e.set_duration(i, durs[i])
+        ref.load(list(durs))
+        assert e.makespan_s == pytest.approx(ref.makespan_s)
+        assert np.allclose(e.slack(), ref.slack())
+
+
+def test_try_duration_undo_restores_state():
+    e = _eng({"a": [], "b": ["a"], "c": ["b"]})
+    e.load([1.0, 1.0, 1.0])
+    slack_before = e.slack().copy()
+    ms, undo = e.try_duration(1, 100.0)
+    assert ms == pytest.approx(102.0)
+    undo()
+    assert e.makespan_s == pytest.approx(3.0)
+    assert np.allclose(e.slack(), slack_before)
+    # slack cache survived the undone trial (no recompute needed)
+    assert e._slack is not None
+
+
+# ---------------------------------------------------------- slot schedule
+def test_slots_one_serializes_everything():
+    e = _eng({f"t{i}": [] for i in range(7)},
+             slots=SlotConfig(max_concurrent=1, platform_slots=1,
+                              elastic_max_slots=1))
+    e.load([1.0] * 7, ["p"] * 7)
+    sched = e.slot_schedule()
+    assert sched.makespan_s == pytest.approx(7.0)
+    assert sched.peak_in_use == {"p": 1}
+
+
+def test_slot_capacity_waves():
+    """9 independent unit tasks on one platform with width 4 -> 3 waves."""
+    e = _eng({f"t{i}": [] for i in range(9)},
+             slots=SlotConfig(max_concurrent=16, elastic_max_slots=4))
+    e.load([1.0] * 9, ["p"] * 9)
+    sched = e.slot_schedule()
+    assert sched.makespan_s == pytest.approx(3.0)
+    assert sched.peak_in_use == {"p": 4}
+    assert sched.wait_s_total > 0.0
+
+
+def test_global_cap_binds_across_platforms():
+    e = _eng({f"t{i}": [] for i in range(8)},
+             slots=SlotConfig(max_concurrent=4, elastic_max_slots=8))
+    e.load([1.0] * 8, ["p", "q"] * 4)
+    assert e.slot_schedule().makespan_s == pytest.approx(2.0)
+
+
+def test_infinite_width_matches_pert():
+    e = _eng({"a": [], "b": ["a"], "c": ["a"], "d": ["b", "c"]})
+    e.load([1.0, 5.0, 2.0, 1.0], ["p"] * 4)
+    assert e.slot_schedule(slots=None).makespan_s == e.makespan_s
+
+
+def test_slot_makespan_monotone_in_capacity_for_fanout():
+    """On fan-out DAGs (independent branches between chokepoints) growing
+    slot width never increases the makespan."""
+    rng = np.random.RandomState(3)
+    edges = {"src": []}
+    for i in range(20):
+        edges[f"b{i:02d}"] = ["src"]
+    edges["sink"] = [f"b{i:02d}" for i in range(20)]
+    durs = [1.0] + rng.uniform(0.2, 5.0, size=20).tolist() + [1.0]
+    prev = None
+    for width in (1, 2, 3, 5, 8, 16, 32):
+        e = _eng(edges, slots=SlotConfig(max_concurrent=64,
+                                         elastic_max_slots=width))
+        e.load(list(durs), ["p"] * 22)
+        ms = e.slot_schedule().makespan_s
+        if prev is not None:
+            assert ms <= prev + 1e-9
+        prev = ms
+
+
+def test_topo_order_violation_rejected():
+    keys = [("b", "__all__"), ("a", "__all__")]
+    preds = {("b", "__all__"): [("a", "__all__")], ("a", "__all__"): []}
+    with pytest.raises(ValueError, match="topologically"):
+        ScheduleEngine(keys, preds)
+
+
+# ------------------------------------------------------- task_dag caching
+def test_task_dag_matches_uncached_expansion():
+    from repro.core.partitions import (StaticPartitions, dep_partition_keys,
+                                       partition_keys)
+    parts = StaticPartitions(("p0", "p1", "p2"))
+    shards = _spec("shards", 10.0, parts=parts)
+    merged = _spec("merged", 5.0, deps=("shards",))
+    g = AssetGraph([shards, merged])
+    keys, preds = task_dag(g, ["merged"])
+    assert keys == [("shards", "p0"), ("shards", "p1"), ("shards", "p2"),
+                    ("merged", "__all__")]
+    for name, key in keys:
+        spec = g[name]
+        want = [(d, dk) for d in spec.deps
+                for dk in dep_partition_keys(g[d].partitions, key)]
+        assert preds[(name, key)] == want
+        assert key in partition_keys(spec.partitions)
+
+
+# --------------------------------------------------- planner edge cases
+def test_plan_empty_graph():
+    plan = plan_run(AssetGraph([]), make_factory())
+    assert plan.feasible
+    assert plan.choices == {}
+    assert plan.predicted_cost_usd == 0.0
+    assert plan.predicted_makespan_s == 0.0
+    assert "planned:" in plan.table()
+
+
+def test_plan_single_task():
+    plan = plan_run(AssetGraph([_spec("solo", 50.0)]), make_factory())
+    ch = plan.choice("solo", "__all__")
+    assert ch is not None and ch.critical
+    assert plan.predicted_makespan_s == pytest.approx(
+        ch.estimate.duration_s)
+    assert plan.predicted_cost_usd <= plan.greedy_cost_usd + 1e-9
+
+
+def test_plan_all_critical_chain_slots_match_pert():
+    specs = [_spec("c0", 30.0)]
+    for i in range(1, 6):
+        specs.append(_spec(f"c{i}", 30.0, deps=(f"c{i-1}",)))
+    plan = plan_run(AssetGraph(specs), make_factory(), ["c5"])
+    assert all(c.critical for c in plan.choices.values())
+    # a chain never contends: slot-aware == critical-path bound
+    assert plan.predicted_makespan_s == pytest.approx(plan.pert_makespan_s)
+
+
+def test_plan_slots_one_serializes():
+    specs = [_spec(f"p{i}", 20.0) for i in range(4)]
+    plan = plan_run(AssetGraph(specs), make_factory(),
+                    slots=SlotConfig(max_concurrent=1, platform_slots=1,
+                                     elastic_max_slots=1))
+    total = sum(c.estimate.duration_s for c in plan.choices.values())
+    assert plan.predicted_makespan_s == pytest.approx(total)
+
+
+# ------------------------------------------------- vectorized pricing
+def test_estimate_batch_matches_scalar():
+    cm = CostModel()
+    cat = default_catalog()
+    plats = [cat[k] for k in sorted(cat)]
+    specs = []
+    for i in range(12):
+        specs.append(asset(name=f"a{i}", compute=ComputeProfile(
+            work_chip_hours=float(i) * 17.3 + 0.4,
+            speedup_class=("scan", "shuffle", "light", "train", "serve")[i % 5],
+            min_chips=(1, 8, 64, 256, 300)[i % 5],
+            memory_gb_per_chip=(0.0, 12.0, 20.0)[i % 3]))(lambda ctx: 0))
+    specs.append(asset(name="analytic", compute=ComputeProfile(
+        flops=1e18, bytes_hbm=1e15, collective_bytes=1e13))(lambda ctx: 0))
+    batch = cm.estimate_batch(specs, plats)
+    for i, s in enumerate(specs):
+        for j, p in enumerate(plats):
+            est = cm.estimate(s, p)
+            assert est.feasible == bool(batch["feasible"][i, j])
+            if est.feasible:
+                # bit-identical, not just close: the planner's plans must not
+                # depend on which pricing path ran
+                assert est.duration_s == batch["duration_s"][i, j]
+                assert est.total_usd == batch["total_usd"][i, j]
+                assert cm.expected_cost_with_retries(est, p) == \
+                    batch["expected_usd"][i, j]
+
+
+def test_estimate_batch_empty():
+    cm = CostModel()
+    cat = default_catalog()
+    out = cm.estimate_batch([], list(cat.values()))
+    assert out["duration_s"].shape == (0, len(cat))
+
+
+# ------------------------------------------------------- determinism
+def test_plan_is_deterministic_across_insertion_orders():
+    """Stable (score, platform, key) tie-breaking: the same DAG must yield
+    byte-identical plans regardless of asset insertion order (a proxy for
+    hash-seed independence — nothing iterates sets/dicts unsorted)."""
+    def build(order):
+        specs = {
+            "src": _spec("src", 5.0),
+            "b0": _spec("b0", 400.0, deps=("src",)),
+            "b1": _spec("b1", 40.0, deps=("src",)),
+            "b2": _spec("b2", 40.0, deps=("src",)),
+            "sink": _spec("sink", 5.0, deps=("b0", "b1", "b2")),
+        }
+        return AssetGraph([specs[n] for n in order])
+
+    g1 = build(["src", "b0", "b1", "b2", "sink"])
+    g2 = build(["sink", "b2", "b1", "b0", "src"])
+    p1 = plan_run(g1, make_factory(), ["sink"])
+    p2 = plan_run(g2, make_factory(), ["sink"])
+    assert p1.table() == p2.table()
+    assert {k: v.platform for k, v in p1.choices.items()} == \
+        {k: v.platform for k, v in p2.choices.items()}
+    # and twice on the same graph object
+    p3 = plan_run(g1, make_factory(), ["sink"])
+    assert p1.table() == p3.table()
+
+
+def test_plan_table_truncation_and_summary_footer():
+    from repro.core.partitions import StaticPartitions
+    parts = StaticPartitions(tuple(f"p{i:03d}" for i in range(80)))
+    shards = _spec("shards", 10.0, parts=parts)
+    merged = _spec("merged", 5.0, deps=("shards",))
+    plan = plan_run(AssetGraph([shards, merged]), make_factory(), ["merged"])
+    t = plan.table(max_rows=50)
+    assert "more tasks" in t
+    assert "asset @ platform" in t
+    # truncated: far fewer per-task rows than tasks
+    assert t.count("shards[") <= 50
+    full = plan.table(max_rows=10_000)
+    assert full.count("shards[") == 80
+    # RunPlanner used a SlotConfig, so the preview reports slot contention
+    assert "slots:" in t
+
+
+def test_planner_slot_config_defaults_match_coordinator():
+    from repro.core import RunCoordinator
+    g = AssetGraph([_spec("a", 10.0)])
+    coord = RunCoordinator(g, make_factory())
+    assert coord.slots == SlotConfig()
+    assert RunPlanner(g, make_factory()).slots == coord.slots
