@@ -1,0 +1,94 @@
+"""CI gate: compare a fresh BENCH_kernels.json against the committed
+baseline and fail on kernel tile-tuning regression.
+
+Usage (what .github/workflows/ci.yml runs after ``kernel_bench.py --smoke``):
+
+    python benchmarks/check_kernel_regression.py \
+        --current BENCH_kernels.json \
+        --baseline benchmarks/baselines/kernel_bench_baseline.json \
+        --max-ratio 1.5
+
+Every kernel config present in both files is checked.  Raw microseconds are
+machine-dependent (CI runners differ from the machine that recorded the
+baseline), so the gate compares the *normalized* per-config metric —
+``tuned_us / default_us`` — against the baseline's value: the fixed-default
+tile runs in the same sweep on the same hardware, so machine speed cancels
+and only a genuine tile-selection or kernel regression moves the ratio.
+Sub-millisecond cells still jitter, so a regression additionally requires
+the raw tuned time to exceed the baseline's by ``--min-delta-us``.
+
+Two unconditional invariants are also enforced on the current run:
+
+* ``speedup_vs_default >= 1.0`` for every config — the tuner must never
+  ship a tile slower than the fixed default it replaced;
+* the two runs were produced in the same mode (interpret vs tpu) — ratios
+  across modes compare different machines and are meaningless.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_kernels.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/kernel_bench_baseline.json")
+    ap.add_argument("--max-ratio", type=float, default=1.5)
+    ap.add_argument("--min-delta-us", type=float, default=500.0,
+                    help="absolute raw tuned-time excess a regression must "
+                         "also show (noise floor for sub-ms cells)")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures: list[str] = []
+    if cur.get("mode") != base.get("mode"):
+        failures.append(
+            f"mode mismatch: current ran {cur.get('mode')!r} but baseline "
+            f"is {base.get('mode')!r} — normalized ratios do not compare")
+
+    checked = 0
+    for name, b_row in sorted(base.get("configs", {}).items()):
+        c_row = cur.get("configs", {}).get(name)
+        if c_row is None:
+            continue
+        b = b_row["tuned_us"] / max(b_row["default_us"], 1e-9)
+        c = c_row["tuned_us"] / max(c_row["default_us"], 1e-9)
+        ratio = c / max(b, 1e-9)
+        raw_delta = c_row["tuned_us"] - b_row["tuned_us"]
+        regressed = ratio > args.max_ratio and raw_delta > args.min_delta_us
+        status = "REGRESSION" if regressed else "OK"
+        print(f"{name:>28}: tuned/default baseline {b:.3f} -> "
+              f"current {c:.3f} ({ratio:.2f}x) {status} "
+              f"[raw {c_row['tuned_us']:.0f}us, delta {raw_delta:+.0f}us]")
+        checked += 1
+        if regressed:
+            failures.append(
+                f"{name}: normalized tuned/default {c:.3f} is {ratio:.2f}x "
+                f"the baseline {b:.3f} (max {args.max_ratio}x) and raw tuned "
+                f"time grew {raw_delta:+.0f}us (floor {args.min_delta_us}us)")
+        if c_row.get("speedup_vs_default", 1.0) < 1.0:
+            failures.append(
+                f"{name}: tuned tile is slower than the fixed default "
+                f"(speedup {c_row['speedup_vs_default']}) — the tuner must "
+                f"never lose to the default")
+    if checked == 0:
+        failures.append("no comparable kernel configs — baseline or current "
+                        "file malformed?")
+    if failures:
+        print("\n".join(["KERNEL BENCH REGRESSION:"] + failures),
+              file=sys.stderr)
+        return 1
+    print(f"kernel bench OK: {checked} configs within "
+          f"{args.max_ratio}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

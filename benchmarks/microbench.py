@@ -1,5 +1,14 @@
 """Substrate microbenchmarks (wall-clock on this host's CPU device; the
-numbers feed the us_per_call CSV column and regression-track the XLA paths)."""
+numbers feed the us_per_call CSV column and regression-track the XLA paths).
+
+Every timed iteration is individually bracketed by ``block_until_ready`` so
+async dispatch can neither pipeline across iterations nor hide a slow final
+call, and each benchmark reports the per-iteration standard deviation next
+to the mean — a high ``std_us`` flags a noisy cell before anyone chases a
+phantom regression.  The two Pallas kernels run here in interpret mode, so
+CPU-only CI exercises the real kernel bodies (not just the XLA reference
+paths) on every push.
+"""
 from __future__ import annotations
 
 import time
@@ -9,17 +18,24 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _bench(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+def _stats(samples: list[float]) -> dict:
+    mean = sum(samples) / len(samples)
+    var = sum((s - mean) ** 2 for s in samples) / len(samples)
+    return {"us": mean, "std_us": var ** 0.5, "iters": len(samples)}
+
+
+def _bench(fn, *args, iters: int = 5, warmup: int = 2) -> dict:
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return _stats(samples)
 
 
-def attention_core_us() -> float:
+def attention_core_us() -> dict:
     from repro.models.attention import attention_core
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     B, S, H, D = 1, 2048, 4, 64
@@ -32,7 +48,19 @@ def attention_core_us() -> float:
     return _bench(fn, q, k, v)
 
 
-def wkv_chunked_us() -> float:
+def flash_attention_pallas_us() -> dict:
+    """The Pallas flash kernel itself, interpret mode (CPU CI)."""
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, D = 1, 512, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.bfloat16)
+    return _bench(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, tuned=True, interpret=True), q, k, v, iters=3)
+
+
+def wkv_chunked_us() -> dict:
     from repro.models.recurrent import wkv_chunked
     ks = jax.random.split(jax.random.PRNGKey(1), 6)
     B, S, H, N = 1, 1024, 4, 64
@@ -46,7 +74,23 @@ def wkv_chunked_us() -> float:
     return _bench(fn, r, k, v, lw, u, s0)
 
 
-def moe_dense_us() -> float:
+def wkv_scan_pallas_us() -> dict:
+    """The Pallas WKV linear-scan kernel itself, interpret mode (CPU CI)."""
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, H, N = 1, 512, 2, 64
+    r, k, v = (jax.random.normal(ks[i], (B, S, H, N), jnp.float32)
+               for i in range(3))
+    lw = -jnp.exp(jax.random.uniform(ks[3], (B, S, H, N), jnp.float32,
+                                     -6.0, 0.0))
+    u = jax.random.normal(ks[4], (H, N), jnp.float32) * 0.1
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    return _bench(lambda *a: ops.linear_scan(*a, tuned=True,
+                                             interpret=True)[0],
+                  r, k, v, lw, u, s0, iters=3)
+
+
+def moe_dense_us() -> dict:
     from repro.configs import get_config
     from repro.models import moe as moe_mod
     cfg = get_config("granite-moe-1b-a400m").scaled(
@@ -62,7 +106,7 @@ def _split(tree):
     return split(tree)
 
 
-def train_step_us() -> float:
+def train_step_us() -> dict:
     from repro.launch.train import make_train_step, smoke_config
     from repro.models import LanguageModel
     from repro.optim import AdamW, OptConfig
@@ -80,23 +124,21 @@ def train_step_us() -> float:
     step = make_train_step(model, opt)
     params, state, _ = step(params, state, batch)  # compile + donate warmup
 
-    def run_once():
-        nonlocal params, state
+    samples = []
+    for _ in range(5):
+        t0 = time.perf_counter()
         params, state, m = step(params, state, batch)
-        return m["loss"]
-
-    t0 = time.perf_counter()
-    iters = 5
-    for _ in range(iters):
-        out = run_once()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        jax.block_until_ready(m["loss"])
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return _stats(samples)
 
 
 def run() -> dict:
     return {
         "attention_core_2k": attention_core_us(),
+        "flash_attention_pallas_512": flash_attention_pallas_us(),
         "wkv_chunked_1k": wkv_chunked_us(),
+        "wkv_scan_pallas_512": wkv_scan_pallas_us(),
         "moe_dense_small": moe_dense_us(),
         "train_step_smoke_7b_cfg": train_step_us(),
     }
@@ -104,4 +146,5 @@ def run() -> dict:
 
 if __name__ == "__main__":
     for k, v in run().items():
-        print(f"{k}: {v:.1f} us")
+        print(f"{k}: {v['us']:.1f} us  (+/- {v['std_us']:.1f} us, "
+              f"n={v['iters']})")

@@ -117,7 +117,8 @@ def main() -> None:
 
     from benchmarks import microbench
     for name, val in microbench.run().items():
-        rows.append((f"micro_{name}", val, ""))
+        rows.append((f"micro_{name}", val["us"],
+                     f"std_us={val['std_us']:.1f};iters={val['iters']}"))
 
     _print_rows(rows)
 

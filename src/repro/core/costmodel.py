@@ -100,11 +100,15 @@ class CostModel:
         assets x platforms in one numpy pass.
 
         Returns ``[n_assets, n_platforms]`` arrays: ``duration_s``,
-        ``total_usd``, ``expected_usd`` (retry-aware) and a boolean
-        ``feasible`` mask (infeasible cells carry +inf duration/cost).  The
-        arithmetic mirrors the scalar path op-for-op so batch and scalar
-        pricing agree bit-for-bit — the planner prices 10k-task DAGs through
-        this instead of a per-task Python loop.
+        ``total_usd``, ``expected_usd`` (retry-aware), the ``CostEstimate``
+        components (``compute_s``, ``base_usd``, ``surcharge_usd``,
+        ``storage_usd``) and a boolean ``feasible`` mask (infeasible cells
+        carry +inf duration/cost, zero surcharge/storage — same as the
+        scalar path).  The arithmetic mirrors the scalar path op-for-op so
+        batch and scalar pricing agree bit-for-bit — the planner prices
+        10k-task DAGs through this instead of a per-task Python loop, and
+        re-assembles per-choice ``CostEstimate`` objects from these columns
+        without ever calling scalar ``estimate``.
         """
         n, m = len(specs), len(platforms)
         work = np.array([s.compute.work_chip_hours for s in specs], dtype=np.float64)
@@ -121,10 +125,17 @@ class CostModel:
         duration = np.full(shape, np.inf)
         total = np.full(shape, np.inf)
         expected = np.full(shape, np.inf)
+        compute = np.full(shape, np.inf)
+        base_usd = np.full(shape, np.inf)
+        surcharge_usd = np.zeros(shape)
+        storage_usd = np.zeros(shape)
         feasible = np.zeros(shape, dtype=bool)
+        out = {"duration_s": duration, "total_usd": total,
+               "expected_usd": expected, "compute_s": compute,
+               "base_usd": base_usd, "surcharge_usd": surcharge_usd,
+               "storage_usd": storage_usd, "feasible": feasible}
         if n == 0:
-            return {"duration_s": duration, "total_usd": total,
-                    "expected_usd": expected, "feasible": feasible}
+            return out
 
         has_work = work > 0
         for j, p in enumerate(platforms):
@@ -154,12 +165,16 @@ class CostModel:
             dur = compute_s + p.startup_s
             hours = dur / 3600.0
             base = hours * chips_f * p.chip_hour_usd
-            tot = (base + base * p.surcharge_rate
-                   + hours * chips_f * p.storage_usd_per_chip_hour)
+            surch = base * p.surcharge_rate
+            stor = hours * chips_f * p.storage_usd_per_chip_hour
+            tot = base + surch + stor
             p_ok = max(1e-3, 1.0 - p.failure_rate - p.preemption_rate)
             duration[:, j] = np.where(ok, dur, np.inf)
             total[:, j] = np.where(ok, tot, np.inf)
             expected[:, j] = np.where(ok, tot / p_ok, np.inf)
+            compute[:, j] = np.where(ok, compute_s, np.inf)
+            base_usd[:, j] = np.where(ok, base, np.inf)
+            surcharge_usd[:, j] = np.where(ok, surch, 0.0)
+            storage_usd[:, j] = np.where(ok, stor, 0.0)
             feasible[:, j] = ok
-        return {"duration_s": duration, "total_usd": total,
-                "expected_usd": expected, "feasible": feasible}
+        return out

@@ -69,6 +69,22 @@ class _Candidates:
     cost: np.ndarray  # [n_assets, n_platforms] expected USD, inf = excluded
     dur: np.ndarray  # [n_assets, n_platforms] seconds, inf = excluded
     rows: np.ndarray  # [n_tasks] task -> asset row
+    #: CostEstimate component columns (same [n_assets, n_platforms] layout)
+    #: so final choices are assembled without per-task scalar ``estimate``
+    compute_s: np.ndarray = None
+    base_usd: np.ndarray = None
+    surcharge_usd: np.ndarray = None
+    storage_usd: np.ndarray = None
+
+    def estimate(self, row: int, col: int) -> CostEstimate:
+        """Re-assemble the scalar ``CostEstimate`` for one priced cell."""
+        return CostEstimate(
+            platform=self.platforms[col],
+            duration_s=float(self.dur[row, col]),
+            compute_s=float(self.compute_s[row, col]),
+            base_usd=float(self.base_usd[row, col]),
+            surcharge_usd=float(self.surcharge_usd[row, col]),
+            storage_usd=float(self.storage_usd[row, col]))
 
 
 @dataclasses.dataclass
@@ -206,19 +222,24 @@ class RunPlanner:
                 raise RuntimeError(
                     f"no feasible platform for asset {spec.name!r}")
         rows = np.asarray([row_of[name] for name, _ in keys], dtype=np.int64)
-        return _Candidates(assets, platforms, cost, dur, rows)
+        return _Candidates(assets, platforms, cost, dur, rows,
+                           compute_s=batch["compute_s"],
+                           base_usd=batch["base_usd"],
+                           surcharge_usd=batch["surcharge_usd"],
+                           storage_usd=batch["storage_usd"])
 
     # ----------------------------------------------------- assignments
     @staticmethod
     def _argmin_rows(primary: np.ndarray, secondary: np.ndarray) -> np.ndarray:
         """Per-row argmin of (primary, secondary, column) — deterministic
-        lexicographic tie-breaking (columns are sorted platform names)."""
-        n, m = primary.shape
-        out = np.zeros(n, dtype=np.int64)
-        for i in range(n):
-            out[i] = min(range(m),
-                         key=lambda j: (primary[i, j], secondary[i, j], j))
-        return out
+        lexicographic tie-breaking (columns are sorted platform names).
+        Vectorized: mask the primary ties, break them on the secondary, and
+        let ``argmax`` on the surviving mask pick the lowest column."""
+        p_min = primary.min(axis=1, keepdims=True)
+        tie = primary == p_min
+        sec = np.where(tie, secondary, np.inf)
+        tie &= sec == sec.min(axis=1, keepdims=True)
+        return tie.argmax(axis=1).astype(np.int64)
 
     def _greedy_cols(self, cand: _Candidates, obj: Objective) -> np.ndarray:
         """What per-task ``factory.choose`` would do — the baseline."""
@@ -313,7 +334,7 @@ class RunPlanner:
             # claw cost back inside the slot envelope
             cols = greedy_cols.copy()
             pert = load(cols)
-            sched = slot_ms()
+            sched = greedy_sched  # identical assignment: reuse its schedule
         else:
             # latency-bound residual: keep buying speed / shifting load off
             # the saturated platform, one schedule pass per round, until the
@@ -343,16 +364,18 @@ class RunPlanner:
             if sched.makespan_s > greedy_ms:
                 cols = greedy_cols.copy()
                 load(cols)
-                sched = slot_ms()
+                sched = greedy_sched
 
         # 3) spend slack: batched downgrade pass — off-path tasks take the
         # cheapest platform whose extra duration provably fits their slack;
         # each trial is an O(cone) incremental retime, slack re-derived
         # lazily once per round, slot-validated in chunks
         slot_cap = max(target, sched.makespan_s)
-        iters += self._downgrade(engine, cand, cols, budget - iters,
-                                 slot_cap, load)
-        sched = slot_ms()
+        moved = self._downgrade(engine, cand, cols, budget - iters,
+                                slot_cap, load)
+        iters += moved
+        if moved:
+            sched = slot_ms()
 
         cost = total_cost(cols)
         # dominance guard: when greedy itself meets the target, never ship a
@@ -360,7 +383,7 @@ class RunPlanner:
         if cost > greedy_cost + 1e-9 and greedy_ms <= target * (1 + 1e-9):
             cols = greedy_cols.copy()
             load(cols)
-            sched = slot_ms()
+            sched = greedy_sched
             cost = greedy_cost
 
         if obj.budget_usd is not None and cost > obj.budget_usd and feasible:
@@ -370,19 +393,21 @@ class RunPlanner:
 
         slack = engine.slack()
         crit = engine.critical_mask()
-        est_cache: dict[tuple[str, int], CostEstimate] = {}
+        # estimates depend on (asset row, platform col) only: reassemble one
+        # CostEstimate per priced cell from the batch columns — no scalar
+        # ``estimate`` calls even when every task is its own asset
+        est_cache: dict[tuple[int, int], CostEstimate] = {}
         choices: dict[TaskKey, PlannedChoice] = {}
         for t, tk in enumerate(keys):
             col = int(cols[t])
-            ck = (tk[0], col)
-            if ck not in est_cache:
-                est_cache[ck] = self.factory.cost_model.estimate(
-                    self.graph[tk[0]],
-                    self.factory.catalog[cand.platforms[col]])
+            ck = (int(rows[t]), col)
+            est = est_cache.get(ck)
+            if est is None:
+                est = est_cache[ck] = cand.estimate(*ck)
             choices[tk] = PlannedChoice(
                 asset=tk[0], partition=tk[1],
                 platform=cand.platforms[col],
-                estimate=est_cache[ck],
+                estimate=est,
                 expected_cost_usd=float(cand.cost[rows[t], col]),
                 critical=bool(crit[t]), slack_s=float(slack[t]))
         return RunPlan(

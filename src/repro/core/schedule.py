@@ -137,6 +137,7 @@ class ScheduleEngine:
         self._dur: list[float] = [0.0] * self.n
         self._platform: list[str] = [""] * self.n
         self._finish: list[float] = [0.0] * self.n
+        self._start: list[float] = [0.0] * self.n
         self._slack: np.ndarray | None = None
         self._makespan = 0.0
 
@@ -154,12 +155,14 @@ class ScheduleEngine:
 
     def _forward_full(self) -> None:
         finish = self._finish
+        starts = self._start
         dur = self._dur
         for i in range(self.n):
             start = 0.0
             for p in self.preds[i]:
                 if finish[p] > start:
                     start = finish[p]
+            starts[i] = start
             finish[i] = start + dur[i]
         self._makespan = max((finish[s] for s in self.sinks), default=0.0)
         self._slack = None
@@ -188,7 +191,15 @@ class ScheduleEngine:
                      platform: str | None = None):
         """Trial variant of ``set_duration``: returns ``(makespan, undo)``
         where calling ``undo()`` restores the previous state (including the
-        cached slack, so an undone trial costs no backward pass)."""
+        cached slack, so an undone trial costs no backward pass).
+
+        Propagation is edge-incremental: each affected node keeps its start
+        (= max of predecessor finishes) cached, and a predecessor's finish
+        change updates it in O(1) — a full rescan of a node's predecessor
+        list happens only when the unique max *decreased*.  That makes the
+        common downgrade trial (durations grow) O(cone edges touched), not
+        O(in-degree) per touched node — on a fan-out DAG the sink has n
+        predecessors and the old rescan made every trial O(n)."""
         old_dur = self._dur[i]
         old_plat = self._platform[i]
         old_ms = self._makespan
@@ -196,23 +207,39 @@ class ScheduleEngine:
         self._dur[i] = float(dur)
         if platform is not None:
             self._platform[i] = platform
-        finish, d, preds, succs = (self._finish, self._dur, self.preds,
-                                   self.succs)
-        changed: list[tuple[int, float]] = []
+        finish, starts, d = self._finish, self._start, self._dur
+        preds, succs = self.preds, self.succs
+        changed: list[tuple[int, float]] = []  # (node, old finish)
+        old_starts: dict[int, float] = {}
+        # indices pop in increasing order, which is topological — every
+        # changed predecessor of a node applies its edge update before the
+        # node itself pops, so each node pops (and re-times) at most once
         heap = [i]
         inheap = {i}
         while heap:
             j = heapq.heappop(heap)
             inheap.discard(j)
-            start = 0.0
-            for p in preds[j]:
-                if finish[p] > start:
-                    start = finish[p]
-            nf = start + d[j]
-            if nf != finish[j]:
-                changed.append((j, finish[j]))
-                finish[j] = nf
-                for s in succs[j]:
+            nf = starts[j] + d[j]
+            fo = finish[j]
+            if nf == fo:
+                continue
+            changed.append((j, fo))
+            finish[j] = nf
+            for s in succs[j]:
+                st = starts[s]
+                if nf > st:  # new max
+                    new_st = nf
+                elif nf < st and fo >= st:  # the max itself decreased
+                    new_st = 0.0
+                    for p in preds[s]:
+                        if finish[p] > new_st:
+                            new_st = finish[p]
+                else:  # below the max before and after: no effect
+                    continue
+                if new_st != st:
+                    if s not in old_starts:
+                        old_starts[s] = st
+                    starts[s] = new_st
                     if s not in inheap:
                         inheap.add(s)
                         heapq.heappush(heap, s)
@@ -226,6 +253,8 @@ class ScheduleEngine:
             self._platform[i] = old_plat
             for j, f in reversed(changed):
                 finish[j] = f
+            for j, st in old_starts.items():
+                starts[j] = st
             self._makespan = old_ms
             self._slack = old_slack
 
@@ -266,8 +295,15 @@ class ScheduleEngine:
             return SlotSchedule(0.0, np.zeros(0), np.zeros(0), {}, 0.0)
         if cfg is None:  # infinite width: the PERT forward pass
             finish = np.asarray(self._finish, dtype=np.float64)
-            dur = np.asarray(self._dur, dtype=np.float64)
-            return SlotSchedule(self._makespan, finish - dur, finish, {}, 0.0)
+            start = np.asarray(self._start, dtype=np.float64)
+            return SlotSchedule(self._makespan, start, finish, {}, 0.0)
+
+        fast = self._pert_feasible_schedule(cfg)
+        if fast is not None:
+            return fast
+        if all(cfg.capacity(p) >= cfg.max_concurrent
+               for p in set(self._platform)):
+            return self._slot_schedule_pool(cfg)
 
         indeg = [len(p) for p in self.preds]
         plats = sorted(set(self._platform))
@@ -316,6 +352,102 @@ class ScheduleEngine:
                     if indeg[s] == 0:
                         ready_at[s] = t
                         heapq.heappush(queues[self._platform[s]], s)
+                if running and running[0][0] <= t:
+                    _, i = heapq.heappop(running)
+                else:
+                    break
+        return SlotSchedule(float(finish.max()), start, finish, peak, wait)
+
+    @staticmethod
+    def _peak_concurrency(start: np.ndarray, finish: np.ndarray) -> int:
+        """Max simultaneous tasks of an interval set, counting a task that
+        finishes at t as freeing its slot before one starting at t takes it
+        (the list scheduler's event order)."""
+        m = len(start)
+        if m == 0:
+            return 0
+        times = np.concatenate([start, finish])
+        deltas = np.concatenate([np.ones(m, dtype=np.int64),
+                                 -np.ones(m, dtype=np.int64)])
+        order = np.lexsort((deltas, times))  # -1 sorts before +1 at ties
+        return int(np.cumsum(deltas[order]).max())
+
+    def _pert_feasible_schedule(self, cfg: SlotConfig) -> SlotSchedule | None:
+        """Contention-free fast path: if the infinite-width (PERT) schedule
+        already respects the global cap and every platform cap, the FIFO
+        list schedule equals it exactly — each task launches the instant it
+        becomes ready, so no event loop is needed.  A wide fan-in/out stage
+        that *does* exceed a cap returns ``None`` and takes the event-driven
+        pass.  Vectorised event sweep, O(n log n) in numpy.
+
+        Requires strictly positive durations: a zero-duration task is a
+        point, not an interval, and the event loop serialises the launch of
+        such chains through slot turnover at a single timestamp — the
+        interval profile can look feasible while FIFO order still delays a
+        successor past its PERT start.  Real cost-model durations are always
+        positive; the degenerate case just takes the exact event loop."""
+        dur = self._dur
+        if any(d <= 0.0 for d in dur):
+            return None
+        start = np.asarray(self._start, dtype=np.float64)
+        finish = np.asarray(self._finish, dtype=np.float64)
+        if self._peak_concurrency(start, finish) > cfg.max_concurrent:
+            return None
+        parr = np.asarray(self._platform)
+        peaks: dict[str, int] = {}
+        for p in sorted(set(self._platform)):
+            mask = parr == p
+            pk = self._peak_concurrency(start[mask], finish[mask])
+            if pk > cfg.capacity(p):
+                return None
+            peaks[p] = pk
+        return SlotSchedule(self._makespan, start, finish, peaks, 0.0)
+
+    def _slot_schedule_pool(self, cfg: SlotConfig) -> SlotSchedule:
+        """Single-pool FIFO list schedule for the (default-config) case where
+        every per-platform cap is >= the global cap, so only the global cap
+        can ever bind: ready tasks form one index-ordered heap and each
+        launch is O(log n) — no per-launch scan across platform queues."""
+        n = self.n
+        indeg = [len(p) for p in self.preds]
+        ready = [i for i in range(n) if indeg[i] == 0]
+        heapq.heapify(ready)
+        in_use = {p: 0 for p in set(self._platform)}
+        peak = dict(in_use)
+        ready_at = [0.0] * n
+        start = np.zeros(n)
+        finish = np.zeros(n)
+        running: list[tuple[float, int]] = []
+        global_in_use = 0
+        t = 0.0
+        wait = 0.0
+        n_done = 0
+        dur, plat, succs = self._dur, self._platform, self.succs
+        while n_done < n:
+            while ready and global_in_use < cfg.max_concurrent:
+                i = heapq.heappop(ready)
+                p = plat[i]
+                start[i] = t
+                finish[i] = t + dur[i]
+                wait += t - ready_at[i]
+                u = in_use[p] + 1
+                in_use[p] = u
+                if u > peak[p]:
+                    peak[p] = u
+                global_in_use += 1
+                heapq.heappush(running, (finish[i], i))
+            if not running:
+                raise RuntimeError("slot schedule stalled (cycle?)")
+            t, i = heapq.heappop(running)
+            while True:
+                in_use[plat[i]] -= 1
+                global_in_use -= 1
+                n_done += 1
+                for s in succs[i]:
+                    indeg[s] -= 1
+                    if indeg[s] == 0:
+                        ready_at[s] = t
+                        heapq.heappush(ready, s)
                 if running and running[0][0] <= t:
                     _, i = heapq.heappop(running)
                 else:

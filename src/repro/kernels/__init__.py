@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot spots (flash attention, RWKV WKV
+scan), their pure-jnp oracles (``ref``), the jit'd dispatch layer (``ops``)
+and the shape-keyed tile autotuner (``autotune``)."""
+from repro.kernels import autotune, ops  # noqa: F401

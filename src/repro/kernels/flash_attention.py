@@ -13,6 +13,18 @@ Supports GQA/MQA directly: kv blocks are indexed by q_head // group_size.
 Positions are contiguous (pos_q = q_offset + iota, pos_k = iota) — the
 train/prefill regime; decode uses the XLA path (attention.py), where the
 work per step is tiny.
+
+Arbitrary sequence lengths are supported: inputs are padded up to the next
+block multiple and the output sliced back.  Padded key positions are masked
+inside the kernel via ``kv_len`` (for causal attention with the standard
+``q_offset = Skv - Sq`` continuation layout the causal mask already excludes
+them, but the explicit mask keeps bidirectional and window variants correct
+too).  When the shapes already divide the blocks, the raw unpadded path runs
+unchanged.
+
+The epilogue (``out_scale`` multiply + ``residual`` add) is fused into the
+final kv step's ``_finish`` so the scaled/residual-added output leaves VMEM
+exactly once instead of costing an extra HBM round trip.
 """
 from __future__ import annotations
 
@@ -25,10 +37,20 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  scale: float, causal: bool, window: int, q_offset: int,
-                  block_q: int, block_k: int, n_kv_blocks: int):
+
+def _flash_kernel(q_ref, k_ref, v_ref, *rest, scale: float, causal: bool,
+                  window: int, q_offset: int, kv_len: int, block_q: int,
+                  block_k: int, n_kv_blocks: int, out_scale: float,
+                  has_residual: bool):
+    if has_residual:
+        res_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        res_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -40,6 +62,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     q_start = q_offset + iq * block_q
     k_start = ik * block_k
+    masked = causal or window > 0 or kv_len > 0
 
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, D)
@@ -48,7 +71,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
 
-        if causal or window > 0:
+        if masked:
             pos_q = q_start + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 0)
             pos_k = k_start + jax.lax.broadcasted_iota(
@@ -58,6 +81,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                 mask &= pos_k <= pos_q
             if window > 0:
                 mask &= (pos_q - pos_k) < window
+            if kv_len > 0:  # padded keys beyond the true length
+                mask &= pos_k < kv_len
             s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[:, 0]
@@ -73,13 +98,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
 
-    if causal or window > 0:
-        # Block-level skip: entirely-future (causal) or stale (window) tiles.
+    if masked:
+        # Block-level skip: entirely-future (causal), stale (window) or
+        # fully-padded (kv_len) tiles.
         should = jnp.bool_(True)
         if causal:
             should &= q_start + block_q - 1 >= k_start
         if window > 0:
             should &= q_start - (k_start + block_k - 1) < window
+        if kv_len > 0:
+            should &= k_start < kv_len
         pl.when(should)(_compute)
     else:
         _compute()
@@ -88,7 +116,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     def _finish():
         l = l_ref[:, 0]
         l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
-        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        o = acc_ref[...] / l[:, None]
+        if out_scale != 1.0:
+            o = o * out_scale
+        if res_ref is not None:
+            o = o + res_ref[0, :, 0, :].astype(jnp.float32)
+        o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
 
 
 def flash_attention(
@@ -102,6 +135,8 @@ def flash_attention(
     q_offset: int = 0,
     block_q: int = 128,
     block_k: int = 128,
+    out_scale: float = 1.0,
+    residual: jax.Array | None = None,  # (B, Sq, Hq, Dv), fused epilogue add
     interpret: bool = False,
 ) -> jax.Array:
     B, Sq, Hq, D = q.shape
@@ -110,31 +145,59 @@ def flash_attention(
     scale = scale if scale is not None else D ** -0.5
     block_q = min(block_q, Sq)
     block_k = min(block_k, Skv)
-    assert Sq % block_q == 0 and Skv % block_k == 0, (
-        "pad sequence to block multiples before calling the kernel")
-    nq, nk = Sq // block_q, Skv // block_k
+
+    # pad-to-block / slice-back: arbitrary sequence lengths run through the
+    # same kernel; the raw path below is untouched when shapes divide
+    pad_q = -Sq % block_q
+    pad_k = -Skv % block_k
+    kv_len = Skv if pad_k else 0
+    if pad_q or pad_k:
+        if pad_q:
+            q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+            if residual is not None:
+                residual = jnp.pad(residual,
+                                   ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        if pad_k:
+            k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
+    else:
+        Sq_p, Skv_p = Sq, Skv
+    nq, nk = Sq_p // block_q, Skv_p // block_k
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
-        q_offset=q_offset, block_q=block_q, block_k=block_k, n_kv_blocks=nk)
+        q_offset=q_offset, kv_len=kv_len, block_q=block_q, block_k=block_k,
+        n_kv_blocks=nk, out_scale=out_scale,
+        has_residual=residual is not None)
 
-    return pl.pallas_call(
+    in_specs = [
+        pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+        pl.BlockSpec((1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        pl.BlockSpec((1, block_k, 1, Dv), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+    ]
+    operands = [q, k, v]
+    if residual is not None:
+        in_specs.append(pl.BlockSpec((1, block_q, 1, Dv),
+                                     lambda b, h, iq, ik: (b, iq, h, 0)))
+        operands.append(residual)
+
+    out = pl.pallas_call(
         kernel,
         grid=(B, Hq, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
-            pl.BlockSpec((1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // G, 0)),
-            pl.BlockSpec((1, block_k, 1, Dv), lambda b, h, iq, ik: (b, ik, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, 1, Dv), lambda b, h, iq, ik: (b, iq, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, Dv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Sq_p, Hq, Dv), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, Dv), jnp.float32),
             pltpu.VMEM((block_q, 128), jnp.float32),  # row-max, lane-broadcast
             pltpu.VMEM((block_q, 128), jnp.float32),  # row-sum, lane-broadcast
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(q, k, v)
+    )(*operands)
+    if pad_q:
+        out = out[:, :Sq]
+    return out

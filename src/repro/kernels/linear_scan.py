@@ -8,6 +8,16 @@ part expressed as (C x C) tiles that feed the MXU.  Stability: all decay
 algebra happens in log space; every exp() argument is <= 0 by construction.
 
   y_t = r_t . (S_{t-1} + (u*k_t) v_t^T);   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+The u-bonus term is fused into the intra-chunk tile's diagonal (d[t,t,:] = u)
+instead of being recomputed as a separate (C,) reduction plus a rank-1 add:
+the single (C x C) @ (C x N) MXU matmul then carries both the strict-lower
+intra-chunk part and the bonus in one pass.
+
+Arbitrary sequence lengths are supported by zero-padding up to the chunk
+multiple: padded steps carry log_w = 0 (decay 1) and k = 0, so the running
+state — and therefore ``s_fin`` — passes through them unchanged; the padded
+``y`` rows are sliced away.  Shapes that already divide run the raw path.
 """
 from __future__ import annotations
 
@@ -17,6 +27,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
 
 
 def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, s_out_ref,
@@ -40,16 +54,18 @@ def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, s_out_ref,
     y_inter = jax.lax.dot_general(r * jnp.exp(p_prev), S,
                                   (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
-    # intra-chunk attention-like tile: A[t,s] = sum_n r[t,n] k[s,n] e^{p_prev[t,n]-p[s,n]}
+    # intra-chunk attention-like tile, bonus fused on the diagonal:
+    #   A[t,s] = sum_n r[t,n] k[s,n] e^{p_prev[t,n]-p[s,n]}   (s < t)
+    #   A[t,t] = sum_n r[t,n] k[t,n] u[n]                     (u-bonus)
     diff = p_prev[:, None, :] - p[None, :, :]  # (C, C, N), masked to s<t
-    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) \
-        > jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
-    d = jnp.where(tri[:, :, None], jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    d = jnp.where((row > col)[:, :, None],
+                  jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    d = jnp.where((row == col)[:, :, None], u[None, None, :], d)
     a = jnp.sum(r[:, None, :] * k[None, :, :] * d, axis=-1)  # (C, C)
-    y_intra = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.float32)
-    bonus = jnp.sum(r * u[None, :] * k, axis=-1)  # (C,)
-    y = y_inter + y_intra + bonus[:, None] * v
+    y = y_inter + jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
     y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
 
     k_hat = k * jnp.exp(p[-1:, :] - p)
@@ -76,8 +92,18 @@ def linear_scan(
 ) -> tuple[jax.Array, jax.Array]:
     B, S, H, N = r.shape
     chunk = min(chunk, S)
-    assert S % chunk == 0, "pad sequence to a chunk multiple"
-    nc = S // chunk
+
+    # pad-to-chunk / slice-back: zeros in (r, k, v) and log_w = 0 leave the
+    # recurrence state untouched, so s_fin stays exact
+    pad = -S % chunk
+    if pad:
+        seq_pad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, seq_pad)
+        k = jnp.pad(k, seq_pad)
+        v = jnp.pad(v, seq_pad)
+        log_w = jnp.pad(log_w, seq_pad)
+    S_p = S + pad
+    nc = S_p // chunk
 
     kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=nc)
     seq_spec = pl.BlockSpec((1, chunk, 1, N), lambda b, h, ic: (b, ic, h, 0))
@@ -94,13 +120,15 @@ def linear_scan(
             pl.BlockSpec((1, 1, N, N), lambda b, h, ic: (b, h, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, S, H, N), r.dtype),
+            jax.ShapeDtypeStruct((B, S_p, H, N), r.dtype),
             jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(r, k, v, log_w, u, s0)
+    if pad:
+        y = y[:, :S]
     return y, s_fin

@@ -4,6 +4,18 @@ On TPU the compiled kernels run natively; on CPU (this container) the same
 kernel bodies execute in ``interpret=True`` mode for correctness work, and
 model code falls back to the XLA reference path for anything
 performance-shaped (the dry-run lowers the XLA path; see DESIGN.md §6).
+
+Tile selection (``kernels/autotune.py``) happens *outside* the jit boundary
+so the blocks reach ``pallas_call`` as static values:
+
+* explicit ``block_q=``/``block_k=``/``chunk=`` kwargs always win and never
+  consult the tuner;
+* ``tuned=True`` resolves the shape/dtype/backend key against the autotune
+  cache — a hit (including entries shipped via the committed baseline store)
+  costs zero timing work; a miss on a compiled-TPU host runs the timing
+  search once and persists the winner; interpret mode, non-TPU hosts and
+  in-trace calls fall back to the VMEM/head-dim heuristic instead of timing;
+* ``tuned=False`` (default) keeps the fixed historical defaults.
 """
 from __future__ import annotations
 
@@ -11,30 +23,126 @@ import functools
 
 import jax
 
+from repro.kernels import autotune as _at
 from repro.kernels import flash_attention as _fa
 from repro.kernels import linear_scan as _ls
 from repro.kernels import ref as _ref
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+DEFAULT_CHUNK = 64
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
-                                             "q_offset", "interpret"))
+def _can_time(*arrays) -> bool:
+    """Eager concrete arrays only: a timing search cannot run under trace."""
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "q_offset", "block_q", "block_k",
+    "out_scale", "interpret"))
+def _flash_jit(q, k, v, residual, *, causal, window, scale, q_offset,
+               block_q, block_k, out_scale, interpret):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        out_scale=out_scale, residual=residual, interpret=interpret)
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
-                    q_offset=0, interpret=None):
+                    q_offset=0, block_q=None, block_k=None, tuned=False,
+                    out_scale=1.0, residual=None, interpret=None):
     interp = (not _on_tpu()) if interpret is None else interpret
-    return _fa.flash_attention(q, k, v, causal=causal, window=window,
-                               scale=scale, q_offset=q_offset,
-                               interpret=interp)
+    bq, bk = block_q, block_k
+    if tuned and (bq is None or bk is None):
+        cfg = _resolve_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, scale=scale,
+                                 interpret=interp,
+                                 has_residual=residual is not None)
+        bq = bq if bq is not None else cfg["block_q"]
+        bk = bk if bk is not None else cfg["block_k"]
+    return _flash_jit(q, k, v, residual, causal=causal, window=window,
+                      scale=scale, q_offset=q_offset,
+                      block_q=bq if bq is not None else DEFAULT_BLOCK_Q,
+                      block_k=bk if bk is not None else DEFAULT_BLOCK_K,
+                      out_scale=out_scale, interpret=interp)
+
+
+def _resolve_attention(q, k, v, *, causal, window, q_offset, scale,
+                       interpret, has_residual):
+    tuner = _at.get_tuner()
+    key = _at.attention_key(q.shape, k.shape, v.shape, q.dtype,
+                            causal=causal, window=window,
+                            backend=_at.backend_tag(interpret))
+    B, Sq, Hq, D = q.shape
+    _, Skv, _, Dv = v.shape
+
+    def heuristic():
+        return _at.heuristic_attention(Sq, Skv, D, Dv, q.dtype)
+
+    if _on_tpu() and not interpret and _can_time(q, k, v):
+        hit = tuner.lookup(key)
+        if hit is not None and hit.get("mode") != "heuristic":
+            return hit["config"]
+        cands = _at.attention_candidates(Sq, Skv, D, Dv, q.dtype,
+                                         has_residual=has_residual)
+        if not cands:
+            return heuristic()
+
+        def measure(cfg):
+            return _at.measure_us(lambda: _flash_jit(
+                q, k, v, residual=None, causal=causal, window=window,
+                scale=scale, q_offset=q_offset, block_q=cfg["block_q"],
+                block_k=cfg["block_k"], out_scale=1.0, interpret=False))
+
+        return tuner.tune(key, cands, measure, mode="tpu")["config"]
+    return tuner.resolve(key, heuristic)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def linear_scan(r, k, v, log_w, u, s0, *, chunk=64, interpret=None):
-    interp = (not _on_tpu()) if interpret is None else interpret
+def _scan_jit(r, k, v, log_w, u, s0, *, chunk, interpret):
     return _ls.linear_scan(r, k, v, log_w, u, s0, chunk=chunk,
-                           interpret=interp)
+                           interpret=interpret)
+
+
+def linear_scan(r, k, v, log_w, u, s0, *, chunk=None, tuned=False,
+                interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    c = chunk
+    if tuned and c is None:
+        c = _resolve_scan(r, k, v, log_w, u, s0, interpret=interp)["chunk"]
+    return _scan_jit(r, k, v, log_w, u, s0,
+                     chunk=c if c is not None else DEFAULT_CHUNK,
+                     interpret=interp)
+
+
+def _resolve_scan(r, k, v, log_w, u, s0, *, interpret):
+    tuner = _at.get_tuner()
+    key = _at.scan_key(r.shape, r.dtype, backend=_at.backend_tag(interpret))
+    B, S, H, N = r.shape
+
+    def heuristic():
+        return _at.heuristic_scan(S, N, r.dtype)
+
+    if _on_tpu() and not interpret and _can_time(r, k, v, log_w, u, s0):
+        hit = tuner.lookup(key)
+        if hit is not None and hit.get("mode") != "heuristic":
+            return hit["config"]
+        cands = _at.scan_candidates(S, N, r.dtype)
+        if not cands:
+            return heuristic()
+
+        def measure(cfg):
+            return _at.measure_us(lambda: _scan_jit(
+                r, k, v, log_w, u, s0, chunk=cfg["chunk"],
+                interpret=False)[0])
+
+        return tuner.tune(key, cands, measure, mode="tpu")["config"]
+    return tuner.resolve(key, heuristic)
 
 
 # re-exported oracles

@@ -1,0 +1,264 @@
+"""Autotuner contract tests: candidate validation (divisibility, VMEM fit),
+cache-hit-does-zero-timing, persistent round-trip (tune -> persist ->
+reload -> identical plan with no re-timing), heuristic fallbacks staying
+in-process, and the ops-layer dispatch rules (explicit kwargs bypass the
+tuner; tuned=True on a non-TPU host resolves without timing)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as at
+from repro.kernels import ops
+from repro.kernels.ref import attention_ref
+
+
+@pytest.fixture
+def isolated_tuner(tmp_path, monkeypatch):
+    """Fresh process-global tuner wired to an empty tmp cache (the committed
+    baseline store must not leak into these tests)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "cache.json"))
+    monkeypatch.setattr(at, "BASELINE_CACHE_PATH",
+                        str(tmp_path / "no_baseline.json"))
+    at.reset_tuner()
+    yield at.get_tuner()
+    at.reset_tuner()
+
+
+# ------------------------------------------------------------- candidates
+def test_attention_candidates_divide_and_fit():
+    cands = at.attention_candidates(512, 512, 64, 64, jnp.float32)
+    assert cands, "ladder must produce candidates for a 512-seq f32 case"
+    for c in cands:
+        assert 512 % c.block_q == 0 and 512 % c.block_k == 0
+        assert at.attention_vmem_bytes(c.block_q, c.block_k, 64, 64,
+                                       jnp.float32) <= at.VMEM_BUDGET
+    # the fixed defaults are reachable, so tuned >= default by construction
+    assert {"block_q": 128, "block_k": 128} in [c.as_dict() for c in cands]
+
+
+def test_attention_candidates_clamp_to_short_sequences():
+    cands = at.attention_candidates(64, 64, 64, 64, jnp.float32)
+    assert all(c.block_q <= 64 and c.block_k <= 64 for c in cands)
+    # ladder values above S clamp onto S and dedupe to one entry
+    assert len({(c.block_q, c.block_k) for c in cands}) == len(cands)
+
+
+def test_attention_candidates_vmem_budget_excludes_big_tiles():
+    tight = at.attention_vmem_bytes(128, 128, 64, 64, jnp.float32) + 1
+    cands = at.attention_candidates(512, 512, 64, 64, jnp.float32,
+                                    vmem_budget=tight)
+    assert cands
+    assert all(at.attention_vmem_bytes(c.block_q, c.block_k, 64, 64,
+                                       jnp.float32) <= tight for c in cands)
+    assert not any(c.block_q == 512 and c.block_k == 512 for c in cands)
+
+
+def test_scan_candidates_divide_and_fit():
+    cands = at.scan_candidates(512, 64, jnp.float32)
+    assert cands
+    for c in cands:
+        assert 512 % c.chunk == 0
+        assert at.scan_vmem_bytes(c.chunk, 64, jnp.float32) <= at.VMEM_BUDGET
+
+
+def test_heuristics_return_valid_tiles():
+    cfg = at.heuristic_attention(512, 512, 64, 64, jnp.bfloat16)
+    assert 512 % cfg["block_q"] == 0 and 512 % cfg["block_k"] == 0
+    wide = at.heuristic_attention(512, 512, 256, 256, jnp.bfloat16)
+    assert wide["block_q"] <= cfg["block_q"]  # wide heads take narrower tiles
+    scfg = at.heuristic_scan(512, 64, jnp.float32)
+    assert 512 % scfg["chunk"] == 0
+
+
+# ---------------------------------------------------------------- caching
+def _fake_measure(log):
+    def measure(cfg):
+        log.append(dict(cfg))
+        # deterministic synthetic cost: prefer the largest block_q/chunk
+        return 1000.0 / float(sum(cfg.values()))
+    return measure
+
+
+def test_tune_picks_best_and_hit_does_zero_timing(isolated_tuner):
+    tuner = isolated_tuner
+    cands = at.attention_candidates(256, 256, 64, 64, jnp.float32)
+    log = []
+    entry = tuner.tune("k1", cands, _fake_measure(log), mode="test")
+    assert len(log) == len(cands) == tuner.timing_calls
+    best = max(cands, key=lambda c: c.block_q + c.block_k)
+    assert entry["config"] == best.as_dict()
+    # hit: identical entry back, measure never called, no timing work
+    log2 = []
+    again = tuner.tune("k1", cands, _fake_measure(log2), mode="test")
+    assert again == entry
+    assert log2 == [] and tuner.timing_calls == len(cands)
+
+
+def test_cache_round_trip_reload_without_retiming(isolated_tuner, tmp_path):
+    tuner = isolated_tuner
+    cands = at.scan_candidates(256, 64, jnp.float32)
+    entry = tuner.tune("scan-key", cands, _fake_measure([]), mode="test")
+    assert os.path.exists(tuner.cache_path)
+
+    def explode(cfg):  # a reload must never time anything
+        raise AssertionError("re-timing after reload")
+
+    fresh = at.Autotuner(cache_path=tuner.cache_path,
+                         baseline_path=str(tmp_path / "none.json"))
+    assert fresh.tune("scan-key", cands, explode, mode="test") == entry
+    assert fresh.resolve("scan-key", explode) == entry["config"]
+    assert fresh.timing_calls == 0
+
+
+def test_baseline_merges_and_local_wins(tmp_path):
+    base, local = tmp_path / "base.json", tmp_path / "local.json"
+    base.write_text(json.dumps({"version": 1, "entries": {
+        "shared": {"config": {"chunk": 16}, "mode": "tpu"},
+        "base-only": {"config": {"chunk": 32}, "mode": "tpu"}}}))
+    local.write_text(json.dumps({"version": 1, "entries": {
+        "shared": {"config": {"chunk": 64}, "mode": "tpu"}}}))
+    tuner = at.Autotuner(cache_path=str(local), baseline_path=str(base))
+    assert tuner.lookup("shared")["config"] == {"chunk": 64}
+    assert tuner.lookup("base-only")["config"] == {"chunk": 32}
+
+
+def test_heuristic_entries_stay_in_process(isolated_tuner):
+    tuner = isolated_tuner
+    cfg = tuner.resolve("miss-key", lambda: {"chunk": 64})
+    assert cfg == {"chunk": 64}
+    assert tuner.timing_calls == 0
+    assert not os.path.exists(tuner.cache_path)  # nothing persisted
+    # a later real tune overrides the heuristic placeholder
+    cands = at.scan_candidates(128, 64, jnp.float32)
+    entry = tuner.tune("miss-key", cands, _fake_measure([]), mode="test")
+    assert entry["mode"] == "test"
+    assert tuner.resolve("miss-key", lambda: {"chunk": 1}) == entry["config"]
+
+
+def test_force_retune_overrides_cached_entry(isolated_tuner):
+    tuner = isolated_tuner
+    cands = at.scan_candidates(256, 64, jnp.float32)
+    tuner.tune("k", cands, _fake_measure([]), mode="test")
+    log = []
+    tuner.tune("k", cands, _fake_measure(log), mode="test", force=True)
+    assert len(log) == len(cands)  # re-timed despite the hit
+
+
+def test_persist_merges_concurrent_writers(tmp_path):
+    path = str(tmp_path / "cache.json")
+    a = at.Autotuner(cache_path=path, baseline_path="")
+    b = at.Autotuner(cache_path=path, baseline_path="")
+    a.put("ka", {"config": {"chunk": 16}, "mode": "tpu"})
+    b.put("kb", {"config": {"chunk": 32}, "mode": "tpu"})
+    merged = at.Autotuner(cache_path=path, baseline_path="")
+    assert merged.lookup("ka")["config"] == {"chunk": 16}
+    assert merged.lookup("kb")["config"] == {"chunk": 32}
+
+
+def test_cache_keys_distinguish_backend_and_flags():
+    shape = (1, 256, 2, 64)
+    k1 = at.attention_key(shape, shape, shape, jnp.float32, causal=True,
+                          window=0, backend="cpu")
+    k2 = at.attention_key(shape, shape, shape, jnp.float32, causal=False,
+                          window=0, backend="cpu")
+    k3 = at.attention_key(shape, shape, shape, jnp.float32, causal=True,
+                          window=0, backend="cpu+interp")
+    k4 = at.attention_key(shape, shape, shape, jnp.bfloat16, causal=True,
+                          window=0, backend="cpu")
+    assert len({k1, k2, k3, k4}) == 4
+
+
+# ------------------------------------------------------------ ops dispatch
+def _attn_inputs(S=128, D=64, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, S, 2, D), dtype)
+    k = jax.random.normal(ks[1], (1, S, 2, D), dtype)
+    v = jax.random.normal(ks[2], (1, S, 2, D), dtype)
+    return q, k, v
+
+
+def test_explicit_kwargs_bypass_tuner(monkeypatch):
+    """block_q=/block_k= (and chunk=) pin the tiles: the tuner must not even
+    be constructed, tuned or not."""
+    def explode():
+        raise AssertionError("tuner consulted despite explicit kwargs")
+    monkeypatch.setattr(at, "get_tuner", explode)
+    q, k, v = _attn_inputs()
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              tuned=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_tuned_dispatch_on_cpu_is_heuristic_with_zero_timing(isolated_tuner):
+    """tuned=True on a non-TPU host: resolves via the heuristic (no timing
+    search at dispatch), matches the reference, and the resolved entry is
+    not persisted."""
+    tuner = isolated_tuner
+    q, k, v = _attn_inputs()
+    out = ops.flash_attention(q, k, v, causal=True, tuned=True,
+                              interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert tuner.timing_calls == 0
+    assert not os.path.exists(tuner.cache_path)
+
+
+def test_tuned_dispatch_prefers_cached_entry(isolated_tuner):
+    """A cached (baseline-shipped) entry wins over the heuristic at
+    dispatch, with zero timing work."""
+    tuner = isolated_tuner
+    q, k, v = _attn_inputs()
+    key = at.attention_key(q.shape, k.shape, v.shape, q.dtype, causal=True,
+                           window=0, backend=at.backend_tag(True))
+    tuner.put(key, {"config": {"block_q": 32, "block_k": 32},
+                    "mode": "interpret"}, persist=False)
+    out = ops.flash_attention(q, k, v, causal=True, tuned=True,
+                              interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert tuner.timing_calls == 0
+
+
+def test_tuned_dispatch_inside_jit_trace_uses_heuristic(isolated_tuner):
+    """tuned=True reached under a jax trace (tracer inputs) must not try to
+    time anything — it falls back to the heuristic and stays correct."""
+    tuner = isolated_tuner
+    q, k, v = _attn_inputs()
+
+    @jax.jit
+    def wrapped(q, k, v):
+        return ops.flash_attention(q, k, v, causal=True, tuned=True,
+                                   interpret=True)
+
+    out = wrapped(q, k, v)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert tuner.timing_calls == 0
+
+
+def test_committed_baseline_cache_is_well_formed():
+    """The baseline shipped in-repo must parse and carry only timed entries
+    with valid tile configs."""
+    path = at.BASELINE_CACHE_PATH
+    if not os.path.exists(path):
+        pytest.skip("no committed autotune baseline")
+    with open(path) as f:
+        data = json.load(f)
+    assert data.get("entries"), "baseline cache is empty"
+    for key, entry in data["entries"].items():
+        assert entry["mode"] != "heuristic"
+        cfg = entry["config"]
+        if key.startswith("flash_attention|"):
+            assert set(cfg) == {"block_q", "block_k"}
+        else:
+            assert set(cfg) == {"chunk"}
+        assert all(isinstance(x, int) and x > 0 for x in cfg.values())

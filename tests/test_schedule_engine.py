@@ -141,6 +141,146 @@ def test_slot_makespan_monotone_in_capacity_for_fanout():
         prev = ms
 
 
+def _reference_list_schedule(e: ScheduleEngine, cfg: SlotConfig):
+    """Naive transcription of the event-driven list scheduler — the oracle
+    the fast paths (PERT-feasible return, single-pool FIFO) must match."""
+    import heapq
+    n = e.n
+    indeg = [len(p) for p in e.preds]
+    plats = sorted(set(e._platform))
+    queues = {p: [] for p in plats}
+    in_use = {p: 0 for p in plats}
+    cap = {p: cfg.capacity(p) for p in plats}
+    ready_at = [0.0] * n
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    running, giu, t, wait = [], 0, 0.0, 0.0
+    for i in range(n):
+        if indeg[i] == 0:
+            heapq.heappush(queues[e._platform[i]], i)
+    n_done = 0
+    while n_done < n:
+        while giu < cfg.max_concurrent:
+            best = None
+            for p in plats:
+                if queues[p] and in_use[p] < cap[p] and (
+                        best is None or queues[p][0] < queues[best][0]):
+                    best = p
+            if best is None:
+                break
+            i = heapq.heappop(queues[best])
+            start[i] = t
+            finish[i] = t + e._dur[i]
+            wait += t - ready_at[i]
+            in_use[best] += 1
+            giu += 1
+            heapq.heappush(running, (finish[i], i))
+        t, i = heapq.heappop(running)
+        while True:
+            in_use[e._platform[i]] -= 1
+            giu -= 1
+            n_done += 1
+            for s in e.succs[i]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready_at[s] = t
+                    heapq.heappush(queues[e._platform[s]], s)
+            if running and running[0][0] <= t:
+                _, i = heapq.heappop(running)
+            else:
+                break
+    return start, finish, wait
+
+
+def test_slot_schedule_fast_paths_match_reference():
+    """Randomized DAGs x slot configs: whatever path slot_schedule takes
+    (PERT-feasible shortcut, single-pool FIFO, general event loop), the
+    start/finish/wait must equal the naive list scheduler's."""
+    rng = np.random.RandomState(11)
+    configs = [
+        SlotConfig(max_concurrent=8, platform_slots=2, elastic_max_slots=8),
+        SlotConfig(max_concurrent=3, platform_slots=1, elastic_max_slots=2),
+        SlotConfig(max_concurrent=2, platform_slots=1, elastic_max_slots=1),
+        SlotConfig(max_concurrent=500, platform_slots=2,
+                   elastic_max_slots=500),  # wide: PERT-feasible shortcut
+    ]
+    for trial in range(25):
+        n = int(rng.randint(2, 35))
+        edges = {"t0": []}
+        for i in range(1, n):
+            k = rng.randint(0, min(i, 4))
+            preds = sorted(rng.choice(i, size=k, replace=False).tolist())
+            edges[f"t{i}"] = [f"t{p}" for p in preds]
+        e = _eng(edges)
+        # mix in zero durations: they must route around the PERT shortcut
+        durs = rng.uniform(0.5, 5.0, size=n)
+        durs[rng.rand(n) < 0.2] = 0.0
+        plats = [("aws", "gcp", "local")[int(x)]
+                 for x in rng.randint(0, 3, size=n)]
+        e.load(durs.tolist(), plats)
+        for cfg in configs:
+            got = e.slot_schedule(cfg)
+            start, finish, wait = _reference_list_schedule(e, cfg)
+            assert np.allclose(got.start, start), (trial, cfg)
+            assert np.allclose(got.finish, finish), (trial, cfg)
+            assert got.wait_s_total == pytest.approx(wait), (trial, cfg)
+
+
+def test_pert_feasible_shortcut_returns_pert_schedule():
+    """Wide caps + positive durations: the shortcut fires and the schedule
+    is exactly the infinite-width forward pass with zero queueing."""
+    e = _eng({"a": [], "b": ["a"], "c": ["a"], "d": ["b", "c"]})
+    e.load([1.0, 5.0, 2.0, 1.0], ["p"] * 4)
+    cfg = SlotConfig(max_concurrent=8, platform_slots=8, elastic_max_slots=8)
+    fast = e._pert_feasible_schedule(cfg)
+    assert fast is not None
+    sched = e.slot_schedule(cfg)
+    assert sched.makespan_s == e.makespan_s
+    assert sched.wait_s_total == 0.0
+    assert np.allclose(sched.finish - sched.start,
+                       np.asarray(e._dur))
+    assert sched.peak_in_use == {"p": 2}  # b and c overlap
+
+
+def test_pert_shortcut_declines_zero_durations():
+    e = _eng({"a": [], "b": ["a"]})
+    e.load([0.0, 1.0], ["p"] * 2)
+    cfg = SlotConfig(max_concurrent=8, platform_slots=8, elastic_max_slots=8)
+    assert e._pert_feasible_schedule(cfg) is None
+
+
+def test_try_duration_fanout_sink_edge_updates():
+    """High-indegree sink: growing/shrinking one branch must retime the sink
+    correctly through the O(1) edge-update path (max increase, max decrease
+    with rescan, and below-max no-ops)."""
+    width = 50
+    edges = {"src": []}
+    for i in range(width):
+        edges[f"b{i:02d}"] = ["src"]
+    edges["sink"] = [f"b{i:02d}" for i in range(width)]
+    e = _eng(edges)
+    durs = [1.0] + [float(i % 7 + 1) for i in range(width)] + [2.0]
+    e.load(list(durs))
+    base = e.makespan_s
+    # grow a non-max branch beyond the max: sink start follows the new max
+    ms, undo = e.try_duration(1, 50.0)
+    assert ms == pytest.approx(1.0 + 50.0 + 2.0)
+    undo()
+    assert e.makespan_s == pytest.approx(base)
+    # shrink the unique max branch: the sink rescans and lands on the next
+    ref = _eng(edges)
+    i_max = int(np.argmax(durs[1:width + 1])) + 1
+    durs2 = list(durs)
+    durs2[i_max] = 0.5
+    ref.load(durs2)
+    ms, undo = e.try_duration(i_max, 0.5)
+    assert ms == pytest.approx(ref.makespan_s)
+    undo()
+    # grow a branch but keep it below the max: makespan unchanged, O(1) exit
+    ms, _undo = e.try_duration(1, durs[1] + 0.1)
+    assert ms == pytest.approx(base)
+
+
 def test_topo_order_violation_rejected():
     keys = [("b", "__all__"), ("a", "__all__")]
     preds = {("b", "__all__"): [("a", "__all__")], ("a", "__all__"): []}
@@ -231,6 +371,12 @@ def test_estimate_batch_matches_scalar():
                 assert est.total_usd == batch["total_usd"][i, j]
                 assert cm.expected_cost_with_retries(est, p) == \
                     batch["expected_usd"][i, j]
+                # component columns (the planner re-assembles CostEstimate
+                # objects from these instead of calling scalar estimate)
+                assert est.compute_s == batch["compute_s"][i, j]
+                assert est.base_usd == batch["base_usd"][i, j]
+                assert est.surcharge_usd == batch["surcharge_usd"][i, j]
+                assert est.storage_usd == batch["storage_usd"][i, j]
 
 
 def test_estimate_batch_empty():
