@@ -35,10 +35,17 @@ PROFILES = {
 
 
 def build_graph(cfg: cc.CrawlConfig | None = None,
-                partitions=None, hints: dict | None = None) -> AssetGraph:
+                partitions=None, hints: dict | None = None,
+                salt: dict | None = None) -> AssetGraph:
+    """``salt`` (partition key -> token) is an external-input stand-in for
+    the cache benchmarks: it is folded into the ``nodes`` *output* (new
+    upstream data) without touching any compute function's source, so
+    changing a partition's salt re-materializes exactly that partition's
+    downstream cone — the shape of a real crawl-snapshot refresh."""
     cfg = cfg or cc.CrawlConfig(n_domains=32, n_pages_per_domain=4, n_seed=24,
                                 max_links=6, tokens_per_page=32)
     hints = hints or {}
+    salt = salt or {}
     parts = partitions if partitions is not None else PARTS
     retry = RetryPolicy(max_attempts=6, backoff_s=0.0, failover_after=2)
 
@@ -50,7 +57,14 @@ def build_graph(cfg: cc.CrawlConfig | None = None,
            retry=retry, platform_hint=hints.get("nodes"))
     def nodes(ctx):
         crawl, shard = crawl_shard(ctx)
-        return cc.nodes_asset(crawl, shard, cfg)
+        out = cc.nodes_asset(crawl, shard, cfg)
+        tok = salt.get(ctx.partition_key)
+        if tok is not None:
+            # a refreshed snapshot crawls different seed pages: rotate one
+            # seed out so the new data propagates through every downstream
+            # value (edges/graph/graph_aggr), not just this record
+            out = {**out, "seed_pages": out["seed_pages"][1:], "salt": tok}
+        return out
 
     @asset(name="edges", deps=("nodes",), partitions=parts,
            compute=PROFILES["edges"], retry=retry,

@@ -1,0 +1,67 @@
+"""CI gate: compare a fresh BENCH_store(_smoke).json against the committed
+baseline and fail on incremental-materialization regressions.
+
+Usage (what .github/workflows/ci.yml runs after ``store_cache.py --smoke``):
+
+    python benchmarks/check_store_regression.py \
+        --current BENCH_store_smoke.json \
+        --baseline benchmarks/baselines/store_cache_baseline.json
+
+Two kinds of check:
+
+* **correctness booleans** — every entry in the current run's ``checks``
+  must hold (warm run executes zero tasks, warm plan schedules no platform
+  slots, backfill executes exactly the stale cone, cutoff executes exactly
+  one task, ...).  These are machine-independent semantics; any failure is
+  a regression outright.
+* **warm speedup floor** — ``warm_speedup`` must stay above the baseline's
+  ``min_warm_speedup``.  Raw wall-clock varies across runners, but the
+  ratio is self-normalizing (cold and warm run in the same process on the
+  same machine), and the floor (10x) sits far below the observed value
+  (~400x+), so only a genuine cache-path regression — warm runs executing
+  work, or bookkeeping blowing up — can trip it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_store_smoke.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/store_cache_baseline.json")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures: list[str] = []
+    for name, ok in sorted(cur.get("checks", {}).items()):
+        if not ok:
+            failures.append(f"check failed: {name}")
+    floor = base.get("min_warm_speedup", 10.0)
+    speedup = cur.get("warm_speedup", 0.0)
+    if speedup < floor:
+        failures.append(f"warm speedup {speedup:.1f}x below the "
+                        f"{floor:.0f}x floor")
+    warm_exec = cur.get("warm", {}).get("tasks_executed", -1)
+    if warm_exec != 0:
+        failures.append(f"warm run executed {warm_exec} tasks (want 0)")
+
+    print(f"store cache gate: warm {speedup:.0f}x (floor {floor:.0f}x), "
+          f"{len(cur.get('checks', {}))} checks")
+    if failures:
+        for fmsg in failures:
+            print(f"REGRESSION: {fmsg}", file=sys.stderr)
+        return 1
+    print("OK: no store-cache regression")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,5 +15,7 @@ from repro.core.planner import (PlannedChoice, RunPlan, RunPlanner,  # noqa: F40
 from repro.core.platforms import Platform, default_catalog  # noqa: F401
 from repro.core.schedule import (ScheduleEngine, SlotConfig,  # noqa: F401
                                  SlotSchedule, task_dag)
-from repro.core.store import MaterializationStore  # noqa: F401
+from repro.core.selection import AssetSelection  # noqa: F401
+from repro.core.store import (MaterializationStore, Staleness,  # noqa: F401
+                              code_version, resolve_staleness, source_hash)
 from repro.core.telemetry import Event, MessageReader  # noqa: F401

@@ -76,6 +76,9 @@ def asset(name: str | None = None, deps: tuple[str, ...] = (),
 class AssetGraph:
     def __init__(self, assets: list[AssetSpec] | None = None):
         self._assets: dict[str, AssetSpec] = {}
+        # reverse adjacency (producer -> consumers), maintained on add() so
+        # downstream() never rescans the whole asset table
+        self._children: dict[str, list[str]] = {}
         for a in assets or []:
             self.add(a)
 
@@ -83,6 +86,8 @@ class AssetGraph:
         if spec.name in self._assets:
             raise ValueError(f"duplicate asset {spec.name!r}")
         self._assets[spec.name] = spec
+        for d in spec.deps:
+            self._children.setdefault(d, []).append(spec.name)
         return spec
 
     def __getitem__(self, name: str) -> AssetSpec:
@@ -131,10 +136,31 @@ class AssetGraph:
             raise ValueError(f"cycle detected among {cyc}")
         return order
 
+    def children(self, name: str) -> tuple[str, ...]:
+        """Direct consumers of ``name`` (memoized reverse edges)."""
+        return tuple(self._children.get(name, ()))
+
     def downstream(self, name: str) -> set[str]:
-        out = set()
-        for a in self._assets.values():
-            if name in a.deps:
-                out.add(a.name)
-                out |= self.downstream(a.name)
+        """Transitive consumers of ``name`` (excluding ``name``), via the
+        memoized reverse adjacency — iterative, O(edges in the cone), where
+        the old recursive version rescanned every asset per call (quadratic
+        on deep graphs)."""
+        out: set[str] = set()
+        stack = [name]
+        while stack:
+            for c in self._children.get(stack.pop(), ()):
+                if c not in out:
+                    out.add(c)
+                    stack.append(c)
+        return out
+
+    def upstream(self, name: str) -> set[str]:
+        """Transitive producers of ``name`` (excluding ``name``)."""
+        out: set[str] = set()
+        stack = [name]
+        while stack:
+            for d in self._assets[stack.pop()].deps:
+                if d not in out:
+                    out.add(d)
+                    stack.append(d)
         return out

@@ -7,6 +7,14 @@ wins), preemptions are distinguished from hard failures, and after
 ``retry.failover_after`` attempts on one platform the Dynamic Factory is
 re-consulted with that platform deny-listed — the orchestration-level answer
 to "EMR needs continual oversight".
+
+Incremental materialization: before scheduling, staleness is resolved per
+(asset, partition) against the content-addressed ``MaterializationStore``
+(see store.py) and emitted as ``STALE`` telemetry; at launch time each task
+re-checks its fingerprint against the now-materialized upstream data hashes,
+so a warm cache executes zero tasks and an upstream that reproduces
+byte-identical data cuts its downstream cone off early.  ``force=True``
+rebuilds the selection unconditionally.
 """
 from __future__ import annotations
 
@@ -23,7 +31,9 @@ from repro.core.factory import DynamicClientFactory
 from repro.core.partitions import dep_partition_keys, partition_keys
 from repro.core.planner import RunPlan, RunPlanner
 from repro.core.schedule import ScheduleEngine, SlotConfig, task_dag
-from repro.core.store import MaterializationStore
+from repro.core.selection import AssetSelection
+from repro.core.store import (MaterializationStore, code_version,
+                              resolve_staleness)
 from repro.core.telemetry import MessageReader
 
 
@@ -154,6 +164,8 @@ class _Task:
     launched_at: float = 0.0
     next_eligible: float = 0.0
     fingerprint: str = ""
+    code_version: str = ""
+    upstream: dict[str, str] = dataclasses.field(default_factory=dict)
 
 
 class RunCoordinator:
@@ -172,7 +184,7 @@ class RunCoordinator:
         graph.validate()
         self.graph = graph
         self.factory = factory
-        self.store = store or MaterializationStore()
+        self.store = store if store is not None else MaterializationStore()
         self.reader = reader or MessageReader()
         self.injector = injector or ContextInjector(reader=self.reader)
         self.injector.reader = self.reader
@@ -215,21 +227,32 @@ class RunCoordinator:
         self.slots = dataclasses.replace(self.slots, elastic_max_slots=v)
 
     # ------------------------------------------------------------------ api
-    def plan(self, targets: list[str] | None = None,
-             objective=None) -> RunPlan:
+    def plan(self, targets: "AssetSelection | str | list[str] | None" = None,
+             objective=None, force: bool = False) -> RunPlan:
         """Global cost/deadline-aware platform assignment (see planner.py),
-        predicted under this coordinator's own slot configuration."""
-        return RunPlanner(self.graph, self.factory,
-                          slots=self.slots).plan(targets, objective)
+        predicted under this coordinator's own slot configuration and —
+        when caching is enabled — against this coordinator's store, so
+        fresh tasks are priced at ~0 and kept out of the slot schedule."""
+        store = self.store if self.use_cache else None
+        return RunPlanner(self.graph, self.factory, slots=self.slots,
+                          store=store).plan(targets, objective, force=force)
 
-    def materialize(self, targets: list[str] | None = None,
+    def materialize(self,
+                    targets: "AssetSelection | str | list[str] | None" = None,
                     run_id: str | None = None,
-                    plan: RunPlan | None = None) -> RunReport:
+                    plan: RunPlan | None = None,
+                    force: bool = False) -> RunReport:
+        """Execute the target selection.  ``targets`` accepts an
+        ``AssetSelection``, a CLI selection string, the legacy ``list[str]``
+        or ``None`` (everything); upstream deps are always materialized (or
+        served from cache) as needed.  ``force`` bypasses the cache and
+        rebuilds every selected task."""
         if plan is not None and not plan.feasible:
             raise ValueError(f"refusing to execute infeasible plan: "
                              f"{plan.reason}")
         run_id = run_id or uuid.uuid4().hex[:10]
-        order = self.graph.topo_order(targets)
+        names = AssetSelection.coerce(targets).resolve(self.graph)
+        order = self.graph.topo_order(names)
         tasks: dict[tuple[str, str], _Task] = {}
         records: list[TaskRecord] = []
         for name in order:
@@ -238,6 +261,18 @@ class RunCoordinator:
                 rec = TaskRecord(asset=name, partition=key)
                 records.append(rec)
                 tasks[(name, key)] = _Task(spec=spec, partition=key, record=rec)
+
+        # upfront per-(asset, partition) staleness resolution: pessimistic
+        # verdicts (stale upstream poisons downstream) drive telemetry and
+        # match what plan() priced; the launch-time fingerprint check below
+        # still grants early cutoff when a re-run upstream reproduces
+        # byte-identical data
+        if self.use_cache:
+            for tk, st in resolve_staleness(
+                    self.graph, self.store, names, force=force).items():
+                if tk in tasks and not st.fresh:
+                    self.reader.emit(run_id, tk[0], tk[1], "", "STALE",
+                                     reason=st.reason)
 
         slots: dict[str, int] = {}  # platform -> current slot budget
         running: list[_Task] = []
@@ -263,14 +298,22 @@ class RunCoordinator:
                     vals[d] = {k: self.store.get(d, k) for k in keys}
             return vals
 
-        def upstream_fingerprints(t: _Task) -> dict[str, str]:
-            out = {}
+        def upstream_hashes(t: _Task) -> dict[str, str] | None:
+            """Content hashes of this task's upstream materializations, or
+            ``None`` when any record is missing — a missing upstream forces
+            staleness outright (no "?" placeholder that could collide with a
+            real hash and fake freshness)."""
+            out: dict[str, str] = {}
             for d in t.spec.deps:
                 dspec = self.graph[d]
                 for k in self._dep_keys(dspec, t.partition):
-                    rec = self.store.record(d, k)
-                    out[f"{d}[{k}]"] = rec["fingerprint"] if rec else "?"
+                    h = self.store.data_hash(d, k)
+                    if h is None:
+                        return None
+                    out[f"{d}[{k}]"] = h
             return out
+
+        cver: dict[str, str] = {}  # asset -> code version (memoized)
 
         pending = list(tasks.values())
         while pending or running:
@@ -281,16 +324,25 @@ class RunCoordinator:
             for t in launchable:
                 if len(running) >= self.max_concurrent:
                     break
-                # cache hit?
-                fp = self.store.fingerprint(t.spec.version, t.partition,
-                                            upstream_fingerprints(t))
+                # cache hit?  checked at launch time (deps are done) so an
+                # upstream that re-ran but reproduced identical data still
+                # short-circuits this task — early cutoff
+                up = upstream_hashes(t)
+                t.code_version = cver.get(t.spec.name) or cver.setdefault(
+                    t.spec.name, code_version(t.spec))
+                t.upstream = up or {}
+                fp = self.store.fingerprint(t.code_version, t.partition,
+                                            t.upstream) if up is not None \
+                    else ""
                 t.fingerprint = fp
-                if self.use_cache and self.store.is_fresh(
-                        t.spec.name, t.partition, fp):
+                if self.use_cache and not force and fp and \
+                        self.store.is_fresh(t.spec.name, t.partition, fp):
                     t.record.status = "success"
                     t.record.cached = True
                     done.add((t.spec.name, t.partition))
                     pending.remove(t)
+                    self.reader.emit(run_id, t.spec.name, t.partition,
+                                     "cache", "CACHE_HIT", fingerprint=fp)
                     self.reader.emit(run_id, t.spec.name, t.partition,
                                      "cache", "SUCCESS", duration_s=0.0,
                                      cached=True)
@@ -483,7 +535,8 @@ class RunCoordinator:
                     done: set) -> None:
         sim, cost = self._bill(run_id, t, h, est)
         self.store.put(t.spec.name, t.partition, h.result, t.fingerprint,
-                       meta={"platform": h.platform, "run_id": run_id})
+                       meta={"platform": h.platform, "run_id": run_id},
+                       code_version=t.code_version, upstream=t.upstream)
         t.record.attempts.append(AttemptRecord(
             h.platform, "success", sim, cost, speculative))
         t.record.status = "success"

@@ -32,6 +32,15 @@ class CostEstimate:
     def total_usd(self) -> float:
         return self.base_usd + self.surcharge_usd + self.storage_usd
 
+    @staticmethod
+    def cached() -> "CostEstimate":
+        """The price of work already materialized in the store: ~0 cost and
+        ~0 duration on the pseudo-platform ``"cached"`` — what the planner
+        assigns to fresh (asset, partition) tasks so warm-cache plans
+        collapse to the stale cone (see planner.py)."""
+        return CostEstimate(platform="cached", duration_s=0.0, compute_s=0.0,
+                            base_usd=0.0, surcharge_usd=0.0, storage_usd=0.0)
+
 
 def roofline_seconds(c: ComputeProfile, chips: int) -> float:
     """max of the three roofline terms across the whole job."""

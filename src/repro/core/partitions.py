@@ -36,16 +36,22 @@ class TimeWindowPartitions(PartitionsDefinition):
     end: str  # "2024-03" inclusive
 
     def keys(self) -> list[str]:
-        y0, m0 = map(int, self.start.split("-"))
-        y1, m1 = map(int, self.end.split("-"))
-        out = []
-        y, m = y0, m0
-        while (y, m) <= (y1, m1):
-            out.append(f"{y:04d}-{m:02d}")
-            m += 1
-            if m > 12:
-                y, m = y + 1, 1
-        return out
+        # memoized via __dict__ (bypasses the frozen-dataclass setattr
+        # guard): key expansion is hot in staleness resolution and task-DAG
+        # builds, and the fields are immutable
+        cached = self.__dict__.get("_keys")
+        if cached is None:
+            y0, m0 = map(int, self.start.split("-"))
+            y1, m1 = map(int, self.end.split("-"))
+            out = []
+            y, m = y0, m0
+            while (y, m) <= (y1, m1):
+                out.append(f"{y:04d}-{m:02d}")
+                m += 1
+                if m > 12:
+                    y, m = y + 1, 1
+            cached = self.__dict__["_keys"] = out
+        return list(cached)
 
     @staticmethod
     def of(*keys: str) -> "StaticPartitions":
@@ -59,8 +65,12 @@ class MultiPartitions(PartitionsDefinition):
     dims: tuple[tuple[str, PartitionsDefinition], ...]
 
     def keys(self) -> list[str]:
-        parts = [d.keys() for _, d in self.dims]
-        return ["/".join(combo) for combo in itertools.product(*parts)]
+        cached = self.__dict__.get("_keys")
+        if cached is None:
+            parts = [d.keys() for _, d in self.dims]
+            cached = self.__dict__["_keys"] = [
+                "/".join(combo) for combo in itertools.product(*parts)]
+        return list(cached)
 
     def split(self, key: str) -> dict[str, str]:
         vals = key.split("/")

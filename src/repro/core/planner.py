@@ -28,9 +28,20 @@ Candidate selection tie-breaks are deterministic — stable sort on
 (score, platform, key) — so the same DAG yields byte-identical plans across
 runs and hash seeds.
 
+**Cache-aware planning**: constructed with a ``MaterializationStore``, the
+planner resolves per-(asset, partition) staleness first and plans only the
+*stale cone* — fresh tasks are priced at $0 / ~0s on the pseudo-platform
+``"cached"`` and never enter the schedule, so they can never occupy a
+platform slot and a warm-cache re-run's plan collapses to the work that is
+actually stale.  Staleness resolution is pessimistic (a stale upstream
+poisons its consumers), which means the stale cone is upward-closed and the
+reduced DAG needs no edge contraction.
+
 The result is a ``RunPlan`` mapping every (asset, partition) to a
 ``PlannedChoice``; ``RunCoordinator.materialize(plan=...)`` consumes it and
-falls back to the greedy factory on failover/deny.
+falls back to the greedy factory on failover/deny.  ``targets`` everywhere
+accepts an ``AssetSelection`` (or the legacy ``list[str]`` / a CLI
+selection string — see ``core/selection.py``).
 """
 from __future__ import annotations
 
@@ -43,6 +54,8 @@ from repro.core.costmodel import CostEstimate
 from repro.core.factory import DynamicClientFactory, Objective
 from repro.core.schedule import (CRITICAL_EPS, ScheduleEngine, SlotConfig,
                                  SlotSchedule, task_dag)
+from repro.core.selection import AssetSelection
+from repro.core.store import MaterializationStore, resolve_staleness
 
 TaskKey = tuple[str, str]  # (asset, partition)
 
@@ -102,6 +115,11 @@ class RunPlan:
     platform_peaks: dict[str, int] = dataclasses.field(default_factory=dict)
     pert_makespan_s: float = 0.0  # infinite-width lower bound
     slot_wait_s: float = 0.0  # total time tasks sat ready-but-queued
+    cached_tasks: int = 0  # fresh-in-store tasks priced at ~0 ("cached")
+
+    @property
+    def stale_tasks(self) -> int:
+        return len(self.choices) - self.cached_tasks
 
     def choice(self, asset: str, partition: str) -> PlannedChoice | None:
         return self.choices.get((asset, partition))
@@ -147,6 +165,10 @@ class RunPlan:
                 lines.append(f"{a + ' @ ' + plat:<49} {n:>6} {usd:>9.2f} "
                              f"{crit:>5}")
         lines.append("-" * len(hdr))
+        if self.cached_tasks:
+            lines.append(
+                f"cached:   {self.cached_tasks} of {len(self.choices)} tasks "
+                f"fresh in store ($0, no slots); {self.stale_tasks} planned")
         lines.append(
             f"planned: ${self.predicted_cost_usd:.2f} / "
             f"{self.predicted_makespan_s / 3600.0:.2f} h   "
@@ -182,11 +204,16 @@ class RunPlanner:
     ``slots`` defaults to the coordinator's ``SlotConfig`` so predictions
     account for finite per-platform concurrency; pass ``slots=None`` for the
     infinite-width (pure critical-path) relaxation.
+
+    ``store`` (optional) enables cache-aware planning: tasks fresh in the
+    ``MaterializationStore`` are excluded from the schedule and priced at
+    ``CostEstimate.cached()`` — see the module docstring.
     """
 
     def __init__(self, graph: AssetGraph, factory: DynamicClientFactory,
                  max_iterations: int | None = None,
-                 slots: SlotConfig | None = SlotConfig()):
+                 slots: SlotConfig | None = SlotConfig(),
+                 store: MaterializationStore | None = None):
         self.graph = graph
         self.factory = factory
         #: hard cap on optimization moves per plan; None (default) scales
@@ -195,6 +222,7 @@ class RunPlanner:
         #: reschedule per move and capped at 1000 regardless)
         self.max_iterations = max_iterations
         self.slots = slots
+        self.store = store
 
     # ------------------------------------------------------------ pricing
     def _candidates(self, keys: list[TaskKey]) -> _Candidates:
@@ -251,10 +279,25 @@ class RunPlanner:
         return self._argmin_rows(score, cand.cost)
 
     # ----------------------------------------------------------------- api
-    def plan(self, targets: list[str] | None = None,
-             objective: Objective | None = None) -> RunPlan:
+    def plan(self, targets: "AssetSelection | str | list[str] | None" = None,
+             objective: Objective | None = None,
+             force: bool = False) -> RunPlan:
         obj = objective or self.factory.objective
-        keys, preds = task_dag(self.graph, targets)
+        names = AssetSelection.coerce(targets).resolve(self.graph)
+        keys, preds = task_dag(self.graph, names)
+        cached_keys: list[TaskKey] = []
+        if self.store is not None and not force:
+            staleness = resolve_staleness(self.graph, self.store, names)
+            fresh = {k for k in keys if staleness[k].fresh}
+            if fresh:
+                # pessimistic resolution makes the stale cone upward-closed
+                # (every predecessor of a stale task is itself stale or
+                # absent), so dropping fresh tasks and filtering their edges
+                # out of ``preds`` is an exact DAG restriction
+                cached_keys = [k for k in keys if k in fresh]
+                keys = [k for k in keys if k not in fresh]
+                preds = {k: [p for p in preds[k] if p not in fresh]
+                         for k in keys}
         cand = self._candidates(keys)
         engine = ScheduleEngine(keys, preds, self.slots)
         rows = cand.rows
@@ -410,6 +453,11 @@ class RunPlanner:
                 estimate=est,
                 expected_cost_usd=float(cand.cost[rows[t], col]),
                 critical=bool(crit[t]), slack_s=float(slack[t]))
+        for tk in cached_keys:
+            choices[tk] = PlannedChoice(
+                asset=tk[0], partition=tk[1], platform="cached",
+                estimate=CostEstimate.cached(), expected_cost_usd=0.0,
+                critical=False, slack_s=0.0)
         return RunPlan(
             objective=obj, choices=choices, predicted_cost_usd=cost,
             predicted_makespan_s=sched.makespan_s,
@@ -419,7 +467,8 @@ class RunPlanner:
             slot_config=self.slots,
             platform_peaks=dict(sched.peak_in_use),
             pert_makespan_s=engine.makespan_s,
-            slot_wait_s=sched.wait_s_total)
+            slot_wait_s=sched.wait_s_total,
+            cached_tasks=len(cached_keys))
 
     # ------------------------------------------------------ upgrade rounds
     def _upgrade_round(self, engine: ScheduleEngine, cand: _Candidates,
@@ -602,11 +651,14 @@ class RunPlanner:
 
 
 def plan_run(graph: AssetGraph, factory: DynamicClientFactory,
-             targets: list[str] | None = None,
+             targets: "AssetSelection | str | list[str] | None" = None,
              objective: Objective | None = None,
-             slots: SlotConfig | None = SlotConfig()) -> RunPlan:
+             slots: SlotConfig | None = SlotConfig(),
+             store: MaterializationStore | None = None,
+             force: bool = False) -> RunPlan:
     """One-shot convenience wrapper around ``RunPlanner``."""
-    return RunPlanner(graph, factory, slots=slots).plan(targets, objective)
+    return RunPlanner(graph, factory, slots=slots, store=store).plan(
+        targets, objective, force=force)
 
 
 # re-exported for backwards compatibility with PR-2 imports

@@ -21,7 +21,7 @@ class Event:
     asset: str
     partition: str
     platform: str
-    kind: str  # SUBMIT|START|HEARTBEAT|MATERIALIZE|SUCCESS|FAILURE|CANCEL|COST|SCALING|RETRY|FAILOVER|SPECULATE
+    kind: str  # SUBMIT|START|HEARTBEAT|MATERIALIZE|SUCCESS|FAILURE|CANCEL|COST|SCALING|RETRY|FAILOVER|SPECULATE|CACHE_HIT|STALE
     payload: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
@@ -83,6 +83,28 @@ class MessageReader:
         for e in self.events(kind="COST"):
             out[e.asset] = out.get(e.asset, 0.0) + e.payload.get("total_usd", 0.0)
         return out
+
+    def cache_stats(self, run_id: str | None = None) -> dict[str, Any]:
+        """Incremental-materialization aggregate: cache hits, executions and
+        the per-reason staleness breakdown (``STALE`` events are emitted by
+        the coordinator's upfront resolution, ``CACHE_HIT`` at launch time —
+        a task can be pessimistically stale yet still hit via early cutoff).
+        """
+        hits = executed = 0
+        reasons: dict[str, int] = {}
+        for e in self.events():
+            if run_id is not None and e.run_id != run_id:
+                continue
+            if e.kind == "CACHE_HIT":
+                hits += 1
+            elif e.kind == "SUCCESS" and not e.payload.get("cached"):
+                executed += 1
+            elif e.kind == "STALE":
+                reason = e.payload.get("reason", "unknown").split(":")[0]
+                reasons[reason] = reasons.get(reason, 0) + 1
+        return {"cache_hits": hits, "executed": executed,
+                "stale_reasons": reasons,
+                "hit_rate": hits / max(1, hits + executed)}
 
     def tail(self, n: int = 20) -> Iterable[Event]:
         with self._lock:

@@ -204,18 +204,22 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def plan_preview(objective_name: str, time_value: float,
                  budget_usd: float | None, deadline_h: float | None,
-                 plan_rows: int = 50) -> None:
+                 plan_rows: int = 50, select: str | None = None) -> None:
     """Orchestration dry-run: global planner assignment for the paper's
     Common-Crawl pipeline, printed as a per-task table (truncated past
     ``plan_rows`` tasks with a per-asset/platform summary) with predicted
     cost, slot contention and makespan vs the greedy per-task factory — no
-    jax work involved."""
-    from repro.core import (CostModel, DynamicClientFactory, Objective,
-                            RunPlanner, SlotConfig, default_catalog)
+    jax work involved.  ``select`` is an asset-selection expression (e.g.
+    ``"cc_fetch+"`` for an asset plus its downstream cone, ``"tag:k=v"``,
+    ``"*"``) parsed by ``repro.core.selection.AssetSelection.parse`` — the
+    same surface ``RunCoordinator.plan()/materialize()`` accept."""
+    from repro.core import (AssetSelection, CostModel, DynamicClientFactory,
+                            Objective, RunPlanner, SlotConfig,
+                            default_catalog)
 
     try:
         from benchmarks.cc_pipeline import SMALL, build_graph
-        graph, targets = build_graph(partitions=SMALL), ["graph_aggr"]
+        graph, default_sel = build_graph(partitions=SMALL), "graph_aggr"
     except ImportError:  # installed as a package without the benchmarks dir
         from repro.core import AssetGraph, ComputeProfile, asset
         a = asset(name="extract",
@@ -225,7 +229,8 @@ def plan_preview(objective_name: str, time_value: float,
                   compute=ComputeProfile(work_chip_hours=26.0,
                                          speedup_class="shuffle"))(
                       lambda ctx, extract: 0)
-        graph, targets = AssetGraph([a, b]), ["transform"]
+        graph, default_sel = AssetGraph([a, b]), "transform"
+    selection = AssetSelection.parse(select or default_sel)
 
     objective = {
         "min_cost": Objective.min_cost,
@@ -237,8 +242,8 @@ def plan_preview(objective_name: str, time_value: float,
     factory = DynamicClientFactory(default_catalog(), CostModel(), objective)
     # the default SlotConfig matches RunCoordinator's execution limits, so
     # the previewed makespan accounts for finite per-platform slots
-    plan = RunPlanner(graph, factory, slots=SlotConfig()).plan(targets)
-    print(f"run plan ({objective.name}, "
+    plan = RunPlanner(graph, factory, slots=SlotConfig()).plan(selection)
+    print(f"run plan ({objective.name}, select={select or default_sel!r}, "
           f"{len(plan.choices)} tasks, {plan.iterations} iterations):")
     print(plan.table(max_rows=plan_rows))
 
@@ -262,11 +267,16 @@ def main() -> None:
     ap.add_argument("--plan-rows", type=int, default=50,
                     help="max per-task rows in the --plan table before "
                          "truncating to a per-asset/platform summary")
+    ap.add_argument("--select", default=None,
+                    help="asset selection for --plan, e.g. 'cc_fetch+' "
+                         "(asset + downstream cone), '+graph_aggr', "
+                         "'tag:stage=ingest', '*'")
     args = ap.parse_args()
 
     if args.plan:
         plan_preview(args.objective, args.time_value, args.budget_usd,
-                     args.deadline_h, plan_rows=args.plan_rows)
+                     args.deadline_h, plan_rows=args.plan_rows,
+                     select=args.select)
         return
 
     if args.list:

@@ -261,3 +261,88 @@ def test_planned_run_falls_back_to_greedy_on_failover():
     assert rec.attempts[0].platform == "pod-spot"
     assert rec.attempts[-1].platform != "pod-spot"
     assert reader.events(kind="FAILOVER")
+
+
+# ------------------------------------------------- cache-aware planning
+def test_warm_plan_prices_cached_and_agrees_with_coordinator():
+    """Plan/coordinator agreement extended to the cached case: on a warm
+    store the planner prices every task at $0 / 0s on the pseudo-platform
+    'cached' with no platform slots, and the coordinator's warm run
+    realizes exactly that — zero executed tasks, zero cost, zero
+    slot-replayed makespan."""
+    from repro.core import MaterializationStore, SlotConfig
+
+    g, targets = contended_fanout(width=8, work=20.0)
+    factory = DynamicClientFactory(
+        default_catalog(), CostModel(), Objective.balanced(600.0),
+        client_builder=lambda p: _NoJitterClient(
+            p, failure_rate=0.0, preemption_rate=0.0))
+    slots = SlotConfig(max_concurrent=8, platform_slots=2,
+                       elastic_max_slots=8)
+    coord = RunCoordinator(g, factory, store=MaterializationStore(),
+                           slots=slots, enable_speculation=False)
+    cold_plan = coord.plan(targets)
+    assert cold_plan.cached_tasks == 0
+    assert coord.materialize(targets, plan=cold_plan).ok
+
+    warm_plan = coord.plan(targets)
+    assert warm_plan.cached_tasks == len(warm_plan.choices) == \
+        len(cold_plan.choices)
+    assert warm_plan.stale_tasks == 0
+    for c in warm_plan.choices.values():
+        assert c.platform == "cached"
+        assert c.expected_cost_usd == 0.0
+        assert c.estimate.total_usd == 0.0 and c.estimate.duration_s == 0.0
+    assert warm_plan.predicted_cost_usd == 0.0
+    assert warm_plan.predicted_makespan_s == 0.0
+    # cached tasks never occupy platform slots
+    assert not any(warm_plan.platform_peaks.values())
+    assert "cached:" in warm_plan.table()
+
+    report = coord.materialize(targets, plan=warm_plan)
+    assert report.ok and all(r.cached for r in report.records)
+    assert report.total_cost == 0.0
+    assert report.slot_makespan_s(coord.slots) == \
+        warm_plan.predicted_makespan_s == 0.0
+
+
+def test_partially_warm_plan_collapses_to_stale_cone():
+    """Invalidating one branch leaves a stale cone of {branch, sink}: only
+    those are priced on real platforms; execution stays inside the cone."""
+    from repro.core import MaterializationStore, SlotConfig
+
+    g, targets = contended_fanout(width=6, work=20.0)
+    store = MaterializationStore()
+    coord = RunCoordinator(g, nofail_factory(), store=store,
+                           slots=SlotConfig(), enable_speculation=False)
+    assert coord.materialize(targets).ok
+
+    store.invalidate("b00")
+    plan = coord.plan(targets)
+    stale = {k for k, c in plan.choices.items() if c.platform != "cached"}
+    assert stale == {("b00", "__all__"), ("sink", "__all__")}
+    assert plan.cached_tasks == len(plan.choices) - 2
+    assert plan.predicted_cost_usd <= 0.5 * coord.plan(
+        targets, force=True).predicted_cost_usd
+
+    report = coord.materialize(targets, plan=plan)
+    executed = {(r.asset, r.partition) for r in report.records
+                if not r.cached}
+    # pessimistic plan prices the whole cone; early cutoff may shrink the
+    # realized set further (b00 reproduces identical bytes -> sink cached)
+    assert executed <= stale and ("b00", "__all__") in executed
+
+
+def test_plan_accepts_selection_expressions():
+    """plan()/materialize() take AssetSelection / string / legacy list and
+    agree on the resulting task set."""
+    from repro.core import AssetSelection
+
+    g, _targets = fanout_graph(width=3)
+    vals = [set(plan_run(g, make_factory(), spelling).choices)
+            for spelling in (["sink"], "sink", "+sink",
+                             AssetSelection.assets("sink").upstream())]
+    assert all(v == vals[0] for v in vals)
+    # selecting mid-graph assets still plans their required ancestors
+    mid = set(plan_run(g, make_factory(), ["b0"]).choices)
+    assert ("src", "__all__") in mid and ("sink", "__all__") not in mid

@@ -1,0 +1,121 @@
+"""AssetSelection: factories, combinators, closures, CLI parsing and the
+legacy-``targets`` coercion shared by planner, coordinator and dryrun."""
+import pytest
+
+from repro.core import AssetGraph, AssetSelection, asset
+
+
+def diamond():
+    """fetch -> parse -> {stats, index} -> report, with tags/groups."""
+    fetch = asset(name="fetch", tags={"group": "ingest", "team": "crawl"})(
+        lambda ctx: 0)
+    parse = asset(name="parse", deps=("fetch",),
+                  tags={"group": "ingest"})(lambda ctx, fetch: 0)
+    stats = asset(name="stats", deps=("parse",),
+                  tags={"group": "analytics"})(lambda ctx, parse: 0)
+    index = asset(name="index", deps=("parse",),
+                  tags={"group": "analytics", "team": "crawl"})(
+        lambda ctx, parse: 0)
+    report = asset(name="report", deps=("stats", "index"))(
+        lambda ctx, stats, index: 0)
+    return AssetGraph([fetch, parse, stats, index, report])
+
+
+G = diamond()
+
+
+def test_assets_and_all():
+    assert AssetSelection.assets("parse", "stats").resolve(G) == [
+        "parse", "stats"]
+    assert AssetSelection.all().resolve(G) == sorted(G.names())
+
+
+def test_unknown_asset_raises_with_catalog():
+    with pytest.raises(ValueError, match="unknown asset.*nope.*available"):
+        AssetSelection.assets("nope").resolve(G)
+
+
+def test_tag_and_group_filters():
+    assert AssetSelection.tag("team", "crawl").resolve(G) == [
+        "fetch", "index"]
+    assert AssetSelection.tag("team").resolve(G) == ["fetch", "index"]
+    assert AssetSelection.group("ingest").resolve(G) == ["fetch", "parse"]
+    assert AssetSelection.tag("team", "nobody").resolve(G) == []
+
+
+def test_closures():
+    assert AssetSelection.assets("parse").downstream().resolve(G) == [
+        "index", "parse", "report", "stats"]
+    assert AssetSelection.assets("parse").downstream(
+        include_self=False).resolve(G) == ["index", "report", "stats"]
+    assert AssetSelection.assets("report").upstream().resolve(G) == \
+        sorted(G.names())
+    assert AssetSelection.assets("stats").upstream().resolve(G) == [
+        "fetch", "parse", "stats"]
+
+
+def test_set_operators():
+    ingest = AssetSelection.group("ingest")
+    crawl = AssetSelection.tag("team", "crawl")
+    assert (ingest | crawl).resolve(G) == ["fetch", "index", "parse"]
+    assert (ingest & crawl).resolve(G) == ["fetch"]
+    assert (ingest - crawl).resolve(G) == ["parse"]
+    assert (AssetSelection.all() - AssetSelection.assets("report")
+            ).resolve(G) == ["fetch", "index", "parse", "stats"]
+
+
+def test_parse_cli_syntax():
+    assert AssetSelection.parse("stats").resolve(G) == ["stats"]
+    assert AssetSelection.parse("parse+").resolve(G) == [
+        "index", "parse", "report", "stats"]
+    assert AssetSelection.parse("+stats").resolve(G) == [
+        "fetch", "parse", "stats"]
+    assert AssetSelection.parse("+index+").resolve(G) == [
+        "fetch", "index", "parse", "report"]
+    assert AssetSelection.parse("*").resolve(G) == sorted(G.names())
+    assert AssetSelection.parse("tag:team=crawl").resolve(G) == [
+        "fetch", "index"]
+    assert AssetSelection.parse("tag:team").resolve(G) == ["fetch", "index"]
+    assert AssetSelection.parse("group:analytics").resolve(G) == [
+        "index", "stats"]
+    # comma/whitespace-separated clauses union
+    assert AssetSelection.parse("fetch, stats+").resolve(G) == [
+        "fetch", "report", "stats"]
+    assert AssetSelection.parse("fetch stats").resolve(G) == [
+        "fetch", "stats"]
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError, match="empty selection"):
+        AssetSelection.parse("   ")
+    with pytest.raises(ValueError, match="bad selection clause"):
+        AssetSelection.parse("a++b")
+
+
+def test_coerce_legacy_spellings():
+    assert AssetSelection.coerce(None).resolve(G) == sorted(G.names())
+    assert AssetSelection.coerce([]).resolve(G) == sorted(G.names())
+    assert AssetSelection.coerce(["stats", "fetch"]).resolve(G) == [
+        "fetch", "stats"]
+    assert AssetSelection.coerce("parse+").resolve(G) == [
+        "index", "parse", "report", "stats"]
+    sel = AssetSelection.group("ingest")
+    assert AssetSelection.coerce(sel) is sel
+    with pytest.raises(TypeError, match="cannot coerce"):
+        AssetSelection.coerce(42)
+    with pytest.raises(TypeError, match="must be strings"):
+        AssetSelection.coerce([1, 2])
+
+
+def test_repr_round_trips_visually():
+    sel = (AssetSelection.group("ingest")
+           | AssetSelection.assets("report")).downstream()
+    assert "ingest" in repr(sel) and "downstream" in repr(sel)
+
+
+def test_graph_downstream_upstream_helpers():
+    assert G.downstream("parse") == {"stats", "index", "report"}
+    assert G.downstream("report") == set()
+    assert G.children("parse") == ("stats", "index")
+    assert G.upstream("report") == {"fetch", "parse", "stats", "index"}
+    assert G.upstream("fetch") == set()

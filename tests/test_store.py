@@ -1,0 +1,302 @@
+"""Content-addressed MaterializationStore: cross-run persistence,
+fingerprint sensitivity, staleness resolution, warm-run/backfill/early-cutoff
+semantics through the coordinator."""
+import dataclasses
+
+import pytest
+
+from repro.core import (AssetGraph, ComputeProfile, CostModel,
+                        DynamicClientFactory, MaterializationStore,
+                        MessageReader, Objective, RunCoordinator,
+                        StaticPartitions, Staleness, asset, code_version,
+                        default_catalog, resolve_staleness, source_hash)
+
+
+def nofail_factory(objective=None):
+    from repro.core.clients import SimulatedClusterClient
+
+    return DynamicClientFactory(
+        default_catalog(), CostModel(), objective or Objective.balanced(),
+        client_builder=lambda p: SimulatedClusterClient(
+            p, failure_rate=0.0, preemption_rate=0.0))
+
+
+def _coord(graph, store, reader=None):
+    return RunCoordinator(graph, nofail_factory(), store=store,
+                          reader=reader or MessageReader(),
+                          enable_speculation=False)
+
+
+# ------------------------------------------------------------ store basics
+def test_store_round_trip_across_two_instances(tmp_path):
+    """A second store instance on the same directory sees the first's
+    materializations — records, values and freshness checks."""
+    d = str(tmp_path / "store")
+    s1 = MaterializationStore(d)
+    fp = s1.fingerprint("1:abc", "p0", {"up[p0]": "deadbeef"})
+    s1.put("a", "p0", {"rows": [1, 2, 3]}, fp, code_version="1:abc",
+           upstream={"up[p0]": "deadbeef"}, meta={"platform": "pod-spot"})
+
+    s2 = MaterializationStore(d)
+    assert len(s2) == 1
+    assert s2.get("a", "p0") == {"rows": [1, 2, 3]}
+    assert s2.is_fresh("a", "p0", fp)
+    rec = s2.record("a", "p0")
+    assert rec["code_version"] == "1:abc"
+    assert rec["upstream"] == {"up[p0]": "deadbeef"}
+    assert rec["meta"]["platform"] == "pod-spot"
+    # invalidation persists too
+    s2.invalidate("a", "p0")
+    assert MaterializationStore(d).record("a", "p0") is None
+
+
+def test_identical_values_share_one_blob(tmp_path):
+    d = str(tmp_path / "store")
+    s = MaterializationStore(d)
+    s.put("a", "p0", [1, 2], "fp-a", code_version="1:x")
+    s.put("b", "p0", [1, 2], "fp-b", code_version="1:y")
+    blobs = list((tmp_path / "store" / "blobs").iterdir())
+    assert len(blobs) == 1  # content-addressed: one blob backs both records
+    assert s.data_hash("a", "p0") == s.data_hash("b", "p0")
+
+
+def test_in_memory_store_still_works():
+    s = MaterializationStore()
+    s.put("a", "p0", 42, "fp")
+    assert s.get("a", "p0") == 42
+    assert s.is_fresh("a", "p0", "fp") and not s.is_fresh("a", "p0", "other")
+    with pytest.raises(KeyError):
+        s.get("a", "p1")
+
+
+# -------------------------------------------------- fingerprint sensitivity
+def test_fingerprint_sensitivity_matrix():
+    """hash(code version, partition, upstream data hashes): each input
+    perturbs the fingerprint, a no-op reproduces it."""
+    base = MaterializationStore.fingerprint("1:abc", "p0", {"u[p0]": "h1"})
+    assert MaterializationStore.fingerprint(
+        "1:abc", "p0", {"u[p0]": "h1"}) == base  # no-op
+    assert MaterializationStore.fingerprint(
+        "2:abc", "p0", {"u[p0]": "h1"}) != base  # version bump
+    assert MaterializationStore.fingerprint(
+        "1:def", "p0", {"u[p0]": "h1"}) != base  # source changed
+    assert MaterializationStore.fingerprint(
+        "1:abc", "p1", {"u[p0]": "h1"}) != base  # partition
+    assert MaterializationStore.fingerprint(
+        "1:abc", "p0", {"u[p0]": "h2"}) != base  # upstream data
+    assert MaterializationStore.fingerprint(
+        "1:abc", "p0", {"u[p0]": "h1", "v[p0]": "h3"}) != base  # new dep
+
+
+def test_source_hash_tracks_function_body():
+    def f(ctx):
+        return 1
+
+    def g(ctx):
+        return 2
+
+    def f2(ctx):
+        return 1
+
+    assert source_hash(f) != source_hash(g)
+    assert source_hash(f) == source_hash(f)
+
+    spec_v1 = asset(name="x", version="1")(f)
+    spec_v2 = asset(name="x", version="2")(f)
+    assert code_version(spec_v1) != code_version(spec_v2)
+    assert code_version(spec_v1).startswith("1:")
+
+
+def test_data_fingerprint_is_content_based():
+    _, h1 = MaterializationStore.data_fingerprint({"a": [1, 2]})
+    _, h2 = MaterializationStore.data_fingerprint({"a": [1, 2]})
+    _, h3 = MaterializationStore.data_fingerprint({"a": [1, 3]})
+    assert h1 == h2 != h3
+
+
+# ---------------------------------------------------- staleness resolution
+def _chain_graph(versions=("1", "1")):
+    up = asset(name="up", version=versions[0],
+               compute=ComputeProfile(work_chip_hours=0.01))(lambda ctx: 7)
+    down = asset(name="down", deps=("up",), version=versions[1],
+                 compute=ComputeProfile(work_chip_hours=0.01))(
+        lambda ctx, up: up * 2)
+    return AssetGraph([up, down])
+
+
+def test_resolve_staleness_reasons(tmp_path):
+    g = _chain_graph()
+    store = MaterializationStore(str(tmp_path / "s"))
+
+    st = resolve_staleness(g, store)
+    assert st[("up", "__all__")] == Staleness(
+        False, "never-materialized", st[("up", "__all__")].fingerprint)
+    assert st[("down", "__all__")].reason == "upstream-stale:up[__all__]"
+
+    _coord(g, store).materialize()
+    st = resolve_staleness(g, store)
+    assert all(v.fresh for v in st.values())
+
+    # forced: everything stale regardless of records
+    st = resolve_staleness(g, store, force=True)
+    assert all(v.reason == "forced" for v in st.values())
+
+    # code change on the upstream poisons the cone pessimistically
+    g2 = _chain_graph(versions=("2", "1"))
+    st = resolve_staleness(g2, store)
+    assert st[("up", "__all__")].reason == "code-changed"
+    assert st[("down", "__all__")].reason == "upstream-stale:up[__all__]"
+
+
+def test_missing_upstream_record_forces_staleness(tmp_path):
+    """A downstream record whose upstream record is gone must be stale —
+    regression test for the old '?' placeholder that faked freshness."""
+    g = _chain_graph()
+    store = MaterializationStore(str(tmp_path / "s"))
+    _coord(g, store).materialize()
+    store.invalidate("up")
+    st = resolve_staleness(g, store)
+    assert st[("up", "__all__")].reason == "never-materialized"
+    assert not st[("down", "__all__")].fresh
+    # and through the coordinator: down's fingerprint recomputes only after
+    # up re-materializes; identical data -> early cutoff, no down re-run
+    rep = _coord(g, store).materialize()
+    executed = [(r.asset, r.partition) for r in rep.records if not r.cached]
+    assert executed == [("up", "__all__")]
+
+
+# ------------------------------------------------ coordinator integration
+def test_warm_run_executes_zero_tasks_across_processes(tmp_path):
+    d = str(tmp_path / "s")
+    runs = []
+
+    def build():
+        up = asset(name="up", partitions=StaticPartitions(("a", "b")),
+                   compute=ComputeProfile(work_chip_hours=0.01))(
+            lambda ctx: ctx.partition_key)
+        down = asset(name="down", deps=("up",),
+                     compute=ComputeProfile(work_chip_hours=0.01))(
+            lambda ctx, up: runs.append("down") or sorted(up.values()))
+        return AssetGraph([up, down])
+
+    cold = _coord(build(), MaterializationStore(d)).materialize()
+    assert cold.ok and not any(r.cached for r in cold.records)
+
+    # new store instance + coordinator on the same directory: a fully warm
+    # run executes nothing
+    warm = _coord(build(), MaterializationStore(d)).materialize()
+    assert warm.ok
+    assert all(r.cached for r in warm.records)
+    assert runs == ["down"]
+
+
+def test_backfill_executes_exactly_the_stale_cone(tmp_path):
+    """Invalidate one upstream partition with changed source data: only that
+    partition's cone re-executes; sibling partitions stay cached."""
+    d = str(tmp_path / "s")
+    parts = StaticPartitions(("a", "b"))
+    external = {"a": 1, "b": 1}  # external input, invisible to code hashes
+
+    def build():
+        up = asset(name="up", partitions=parts,
+                   compute=ComputeProfile(work_chip_hours=0.01))(
+            lambda ctx: external[ctx.partition_key])
+        mid = asset(name="mid", deps=("up",), partitions=parts,
+                    compute=ComputeProfile(work_chip_hours=0.01))(
+            lambda ctx, up: up * 10)
+        sink = asset(name="sink", deps=("mid",),
+                     compute=ComputeProfile(work_chip_hours=0.01))(
+            lambda ctx, mid: sum(mid.values()))
+        return AssetGraph([up, mid, sink])
+
+    store = MaterializationStore(d)
+    assert _coord(build(), store).materialize().ok
+
+    external["a"] = 2  # the source snapshot for partition 'a' changed
+    store.invalidate("up", "a")
+    rep = _coord(build(), MaterializationStore(d)).materialize()
+    executed = sorted((r.asset, r.partition) for r in rep.records
+                      if not r.cached)
+    # sink consumes both mid partitions (fan-in), so it is in the cone
+    assert executed == [("mid", "a"), ("sink", "__all__"), ("up", "a")]
+    assert MaterializationStore(d).get("sink", "__all__") == 30
+
+
+def test_early_cutoff_upstream_reproduces_identical_data(tmp_path):
+    d = str(tmp_path / "s")
+    g = _chain_graph()
+    store = MaterializationStore(d)
+    _coord(g, store).materialize()
+    store.invalidate("up", "__all__")
+    rep = _coord(g, store).materialize()
+    executed = [(r.asset, r.partition) for r in rep.records if not r.cached]
+    assert executed == [("up", "__all__")]  # down cut off: same bytes
+
+
+def test_force_rebuilds_everything(tmp_path):
+    g = _chain_graph()
+    store = MaterializationStore(str(tmp_path / "s"))
+    _coord(g, store).materialize()
+    rep = _coord(g, store).materialize(force=True)
+    assert not any(r.cached for r in rep.records)
+
+
+def test_code_change_invalidates_only_its_cone(tmp_path):
+    d = str(tmp_path / "s")
+    parts = StaticPartitions(("a", "b"))
+
+    def build(down_body):
+        up = asset(name="up", partitions=parts,
+                   compute=ComputeProfile(work_chip_hours=0.01))(
+            lambda ctx: ctx.partition_key)
+        down = asset(name="down", deps=("up",), partitions=parts,
+                     compute=ComputeProfile(work_chip_hours=0.01))(down_body)
+        return AssetGraph([up, down])
+
+    def v1(ctx, up):
+        return up + "!"
+
+    def v2(ctx, up):
+        return up + "?"
+
+    store = MaterializationStore(d)
+    assert _coord(build(v1), store).materialize().ok
+    rep = _coord(build(v2), MaterializationStore(d)).materialize()
+    executed = sorted((r.asset, r.partition) for r in rep.records
+                      if not r.cached)
+    assert executed == [("down", "a"), ("down", "b")]  # up untouched
+
+
+def test_cache_telemetry(tmp_path):
+    g = _chain_graph()
+    store = MaterializationStore(str(tmp_path / "s"))
+    reader = MessageReader()
+    coord = _coord(g, store, reader=reader)
+    coord.materialize(run_id="cold")
+    coord.materialize(run_id="warm")
+    cold = reader.cache_stats("cold")
+    warm = reader.cache_stats("warm")
+    assert cold == {"cache_hits": 0, "executed": 2,
+                    "stale_reasons": {"never-materialized": 1,
+                                      "upstream-stale": 1},
+                    "hit_rate": 0.0}
+    assert warm["cache_hits"] == 2 and warm["executed"] == 0
+    assert warm["hit_rate"] == 1.0 and warm["stale_reasons"] == {}
+    assert reader.events(kind="CACHE_HIT")
+
+
+def test_store_record_survives_value_strip(tmp_path):
+    """The persisted index never embeds values — only blob paths — and a
+    reloaded record still resolves its value through the blob."""
+    d = str(tmp_path / "s")
+    s = MaterializationStore(d)
+    s.put("a", "p0", {"big": list(range(100))}, "fp")
+    rec = MaterializationStore(d).record("a", "p0")
+    assert "value" not in rec and rec["path"].startswith("blobs/")
+    assert MaterializationStore(d).get("a", "p0")["big"][-1] == 99
+
+
+def test_staleness_is_frozen():
+    st = Staleness(True, "fresh", "fp")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        st.fresh = False
