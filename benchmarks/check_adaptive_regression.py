@@ -1,0 +1,73 @@
+"""CI gate: compare a fresh BENCH_adaptive(_smoke).json against the
+committed baseline and fail on closed-loop-adaptation regressions.
+
+Usage (what .github/workflows/ci.yml runs after ``adaptive_drift.py --smoke``):
+
+    python benchmarks/check_adaptive_regression.py \
+        --current BENCH_adaptive_smoke.json \
+        --baseline benchmarks/baselines/adaptive_drift_baseline.json
+
+Two kinds of check:
+
+* **correctness booleans** — every entry in the current run's ``checks``
+  must hold (zero-drift parity, no spurious replans, severe-drift wins,
+  every run ok).  These are machine-independent semantics over *simulated*
+  makespan/cost, so any failure is a regression outright.
+* **severe-drift floors** — makespan and cost reduction at the severe
+  level must stay above the baseline's floors.  The floors (15% / 5%) sit
+  far below the observed values (~80% / ~70%), so only a genuine
+  closed-loop regression — drift never detected, replan never adopted, the
+  migration mispriced — can trip them; fault-injection noise cannot.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_adaptive_smoke.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/adaptive_drift_baseline.json")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures: list[str] = []
+    for name, ok in sorted(cur.get("checks", {}).items()):
+        if not ok:
+            failures.append(f"check failed: {name}")
+
+    severe = cur.get("levels", {}).get("severe", {})
+    mk_red = severe.get("makespan_reduction", 0.0)
+    cost_red = severe.get("cost_reduction", 0.0)
+    mk_floor = base.get("min_severe_makespan_reduction", 0.15)
+    cost_floor = base.get("min_severe_cost_reduction", 0.05)
+    if mk_red < mk_floor:
+        failures.append(f"severe makespan reduction {mk_red:.1%} below the "
+                        f"{mk_floor:.0%} floor")
+    if cost_red < cost_floor:
+        failures.append(f"severe cost reduction {cost_red:.1%} below the "
+                        f"{cost_floor:.0%} floor")
+    replans = severe.get("closed", {}).get("replans_adopted", 0)
+    if replans < 1:
+        failures.append("closed loop adopted no replan under severe drift")
+
+    print(f"adaptive drift gate: severe makespan -{mk_red:.1%} "
+          f"(floor {mk_floor:.0%}), cost -{cost_red:.1%} "
+          f"(floor {cost_floor:.0%}), {len(cur.get('checks', {}))} checks")
+    if failures:
+        for fmsg in failures:
+            print(f"REGRESSION: {fmsg}", file=sys.stderr)
+        return 1
+    print("OK: no closed-loop adaptation regression")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,24 +1,24 @@
-"""Fig 3: stacked run outcomes (success / failure / cancelled) by platform
-under fault injection, and the ~2x trial-run gap between the cheap and the
-managed platform before production stability.
+"""Fig 3: stacked run outcomes (success / failure / preemption / cancelled)
+by platform under fault injection, and the ~2x trial-run gap between the
+cheap and the managed platform before production stability.
 """
 from __future__ import annotations
 
 from benchmarks.cc_pipeline import SMALL, run_policy
+from repro.core.telemetry import OUTCOME_KEYS
 
 
 def run(n_seeds: int = 10) -> dict:
-    counts = {"pod-spot": {"success": 0, "failure": 0, "cancelled": 0},
-              "pod-premium": {"success": 0, "failure": 0, "cancelled": 0}}
+    counts = {"pod-spot": {k: 0 for k in OUTCOME_KEYS},
+              "pod-premium": {k: 0 for k in OUTCOME_KEYS}}
     attempts = {"pod-spot": [], "pod-premium": []}
     for seed in range(n_seeds):
         for policy, plat in (("all-spot", "pod-spot"),
                              ("all-premium", "pod-premium")):
             report, reader = run_policy(policy, seed=100 + seed,
                                         partitions=SMALL)
-            oc = reader.outcome_counts().get(plat,
-                                             {"success": 0, "failure": 0,
-                                              "cancelled": 0})
+            oc = reader.outcome_counts().get(
+                plat, {k: 0 for k in OUTCOME_KEYS})
             for k in counts[plat]:
                 counts[plat][k] += oc.get(k, 0)
             attempts[plat].append(

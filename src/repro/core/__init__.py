@@ -1,4 +1,7 @@
 """The paper's contribution: cost-effective multi-platform orchestration."""
+from repro.core.adaptive import (AdaptiveConfig, AdaptiveController,  # noqa: F401
+                                 CircuitBreaker, DriftDetector,
+                                 OnlineCostModel)
 from repro.core.assets import (AssetGraph, AssetSpec, ComputeProfile,  # noqa: F401
                                RetryPolicy, asset)
 from repro.core.clients import (JobSpec, LocalClient, PlatformClient,  # noqa: F401

@@ -8,6 +8,7 @@ a retry policy and platform hints.  ``@asset`` builds specs declaratively;
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable
 
 from repro.core.partitions import PartitionsDefinition
@@ -33,6 +34,29 @@ class RetryPolicy:
     max_attempts: int = 3
     backoff_s: float = 0.2
     failover_after: int = 2  # attempts on the chosen platform before rerouting
+    backoff_cap_s: float = 30.0  # ceiling for the exponential schedule
+    jitter: float = 0.25  # +/- fraction of the delay, deterministic per task
+
+    def delay_s(self, attempt: int, key: tuple[str, str] = ("", "")) -> float:
+        """Backoff before retry number ``attempt`` (1-based): capped
+        exponential ``backoff_s * 2**(attempt-1)`` with deterministic jitter
+        derived from ``key`` (asset, partition) — no RNG state, so reruns and
+        tests reproduce the exact eligibility schedule while distinct tasks
+        retrying after the same platform hiccup decorrelate instead of
+        stampeding back together."""
+        if self.backoff_s <= 0.0:
+            return 0.0
+        base = min(self.backoff_s * (2.0 ** max(0, attempt - 1)),
+                   self.backoff_cap_s)
+        if self.jitter <= 0.0:
+            return base
+        # blake2b is stable across processes (unlike hash()), cheap, and
+        # keyed only by task identity + attempt so a given retry always
+        # lands at the same offset in [-jitter, +jitter].
+        digest = hashlib.blake2b(
+            f"{key[0]}|{key[1]}|{attempt}".encode(), digest_size=8).digest()
+        unit = int.from_bytes(digest, "big") / float(2 ** 64)  # [0, 1)
+        return base * (1.0 + self.jitter * (2.0 * unit - 1.0))
 
 
 @dataclasses.dataclass(frozen=True)

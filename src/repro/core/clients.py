@@ -152,8 +152,11 @@ class SimulatedClusterClient(PlatformClient):
                 failed = draw < self.failure_rate
                 preempted = (not failed and
                              draw < self.failure_rate + self.preemption_rate)
+                # partial progress before dying: drawn last so the
+                # jitter/outcome stream is unchanged vs earlier seeds
+                bad = failed or preempted
+                frac = float(rng.uniform(0.2, 0.8)) if bad else 1.0
                 if self.sim_time_scale > 0:
-                    frac = rng.uniform(0.2, 0.8) if (failed or preempted) else 1.0
                     deadline = time.time() + sim * self.sim_time_scale * frac
                     while time.time() < deadline:
                         if h.cancelled:
@@ -171,7 +174,10 @@ class SimulatedClusterClient(PlatformClient):
                 h.sim_duration_s = sim
             except Exception as e:
                 h.error = e
-                h.sim_duration_s = sim * (0.5 if isinstance(e, PlatformError)
+                # failed/preempted attempts bill the partial progress they
+                # actually burned (the drawn 0.2-0.8 fraction), not a flat
+                # half — keeps billed cost consistent with simulated time
+                h.sim_duration_s = sim * (frac if isinstance(e, PlatformError)
                                           else 1.0)
             h.finished = time.time()
 

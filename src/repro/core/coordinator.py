@@ -23,6 +23,7 @@ import time
 import uuid
 from typing import Any
 
+from repro.core.adaptive import AdaptiveConfig, AdaptiveController
 from repro.core.assets import AssetGraph, AssetSpec
 from repro.core.clients import JobSpec, PlatformError, RunHandle
 from repro.core.context import ContextInjector
@@ -180,7 +181,9 @@ class RunCoordinator:
                  straggler_min_s: float = 0.05,
                  enable_speculation: bool = True,
                  use_cache: bool = True,
-                 slots: SlotConfig | None = None):
+                 slots: SlotConfig | None = None,
+                 adaptive: "AdaptiveController | AdaptiveConfig | bool | None"
+                 = None):
         graph.validate()
         self.graph = graph
         self.factory = factory
@@ -198,6 +201,15 @@ class RunCoordinator:
         self.straggler_min_s = straggler_min_s
         self.enable_speculation = enable_speculation
         self.use_cache = use_cache
+        # closed-loop adaptation (see core/adaptive.py): online cost model +
+        # drift-triggered replanning + per-platform circuit breakers.  Pass
+        # True (defaults), an AdaptiveConfig, or a prebuilt controller.
+        if adaptive is True:
+            adaptive = AdaptiveConfig()
+        if isinstance(adaptive, AdaptiveConfig):
+            adaptive = AdaptiveController(factory.catalog, factory.cost_model,
+                                          adaptive)
+        self.adaptive: AdaptiveController | None = adaptive or None
         self._dep_key_cache: dict[tuple[str, str], list[str]] = {}
 
     # legacy attribute style stays writable, but reads/writes go through
@@ -232,10 +244,22 @@ class RunCoordinator:
         """Global cost/deadline-aware platform assignment (see planner.py),
         predicted under this coordinator's own slot configuration and —
         when caching is enabled — against this coordinator's store, so
-        fresh tasks are priced at ~0 and kept out of the slot schedule."""
+        fresh tasks are priced at ~0 and kept out of the slot schedule.
+
+        With an adaptive controller attached, pricing goes through the
+        online cost model (learned duration ratios and success rates),
+        open-breaker platforms are dropped from the candidate catalog, and
+        scheduling is preemption-aware (rework-inflated durations)."""
         store = self.store if self.use_cache else None
-        return RunPlanner(self.graph, self.factory, slots=self.slots,
-                          store=store).plan(targets, objective, force=force)
+        factory, preemption_aware = self.factory, False
+        if self.adaptive is not None:
+            factory = self.adaptive.planning_factory(self.factory,
+                                                     time.time())
+            preemption_aware = True
+        return RunPlanner(self.graph, factory, slots=self.slots,
+                          store=store,
+                          preemption_aware=preemption_aware).plan(
+                              targets, objective, force=force)
 
     def materialize(self,
                     targets: "AssetSelection | str | list[str] | None" = None,
@@ -251,6 +275,10 @@ class RunCoordinator:
             raise ValueError(f"refusing to execute infeasible plan: "
                              f"{plan.reason}")
         run_id = run_id or uuid.uuid4().hex[:10]
+        # the run-level objective replans are budgeted against (replanned
+        # objectives hold *remaining* budget/deadline, so always derive from
+        # this one, never from the current plan's)
+        base_obj = plan.objective if plan is not None else self.factory.objective
         names = AssetSelection.coerce(targets).resolve(self.graph)
         order = self.graph.topo_order(names)
         tasks: dict[tuple[str, str], _Task] = {}
@@ -319,6 +347,11 @@ class RunCoordinator:
         while pending or running:
             # ---------------- launch ready tasks ------------------------
             now = time.time()
+            # fleet-wide platform eviction: platforms with an open circuit
+            # breaker are denied for every task (a half-open breaker admits
+            # exactly one probe launch per cooldown)
+            open_plats = (self.adaptive.open_platforms(now)
+                          if self.adaptive is not None else set())
             launchable = [t for t in pending
                           if deps_ready(t) and now >= t.next_eligible]
             for t in launchable:
@@ -351,22 +384,31 @@ class RunCoordinator:
                 if plan is not None:
                     pc = plan.choice(t.spec.name, t.partition)
                     if (pc is not None and pc.platform not in t.deny
+                            and pc.platform not in open_plats
                             and pc.platform in self.factory.catalog):
                         platform = self.factory.catalog[pc.platform]
                         est = pc.estimate
                 if platform is None:
                     # no plan, or the planned platform was deny-listed after
-                    # failures: fall back to the greedy per-task factory
+                    # failures / tripped its breaker: fall back to the
+                    # greedy per-task factory
                     try:
-                        platform, est = self.factory.choose(t.spec,
-                                                            deny=t.deny)
+                        platform, est = self.factory.choose(
+                            t.spec, deny=t.deny | open_plats)
                     except RuntimeError:
-                        # every platform deny-listed: reset and take the best
-                        # remaining option anyway (failures were transient)
-                        t.deny.clear()
-                        self.reader.emit(run_id, t.spec.name, t.partition, "",
-                                         "DENY_RESET")
-                        platform, est = self.factory.choose(t.spec)
+                        try:
+                            # breakers made it unsolvable: a sick platform
+                            # beats no platform — ignore breakers, keep the
+                            # per-task deny list
+                            platform, est = self.factory.choose(t.spec,
+                                                                deny=t.deny)
+                        except RuntimeError:
+                            # every platform deny-listed: reset and take the
+                            # best remaining option (failures were transient)
+                            t.deny.clear()
+                            self.reader.emit(run_id, t.spec.name, t.partition,
+                                             "", "DENY_RESET")
+                            platform, est = self.factory.choose(t.spec)
                 # elastic scaling: grow this platform's slot budget while a
                 # backlog exists (paper: "automatic scaling")
                 cur = slots.get(platform.name, self.platform_slots)
@@ -394,6 +436,8 @@ class RunCoordinator:
                                  planned=plan is not None)
                 t.handle = self.factory.client(platform).submit(job)
                 t.launched_at = now
+                if self.adaptive is not None:
+                    self.adaptive.note_launch(platform.name, now)
                 pending.remove(t)
                 running.append(t)
                 self.reader.emit(run_id, t.spec.name, t.partition,
@@ -452,7 +496,70 @@ class RunCoordinator:
                                  failed_hard)
                 t.handle = t.spec_handle = None
 
+            # ---------------- closed loop: learn / trip / replan ---------
+            if self.adaptive is not None:
+                plan = self._adaptive_step(run_id, names, base_obj, plan,
+                                           tasks, pending, records, force)
+
         return RunReport(run_id=run_id, records=records, graph=self.graph)
+
+    def _adaptive_step(self, run_id: str, names: list[str], base_obj,
+                       plan: RunPlan | None, tasks: dict,
+                       pending: list, records: list,
+                       force: bool) -> RunPlan | None:
+        """One closed-loop tick: ingest fresh telemetry into the online
+        model / drift detector / breakers, emit breaker transitions, and —
+        when drift fires — replan the not-yet-launched tasks under the
+        remaining budget/deadline.  Returns the (possibly new) plan."""
+        ctl = self.adaptive
+        outcomes, transitions = ctl.ingest(self.reader)
+        for plat, state in transitions:
+            self.reader.emit(run_id, "", "", plat, "BREAKER", state=state,
+                             consecutive_failures=ctl.breakers[plat].consecutive)
+        if not outcomes:
+            return plan  # nothing new happened; drift verdict is unchanged
+        now = time.time()
+        reasons = ctl.should_replan(now)
+        if not reasons or not pending:
+            return plan
+        # in-flight and finished tasks keep their assignments: replan only
+        # what is still pending (the set of non-pending keys is
+        # predecessor-closed — a task launches only after its deps finish)
+        pending_keys = {(t.spec.name, t.partition) for t in pending}
+        exclude = set(tasks) - pending_keys
+        obj = base_obj
+        spent = sum(r.total_cost for r in records)
+        elapsed = RunReport(run_id, records, self.graph).makespan_s()
+        remaining_budget = (None if obj.budget_usd is None
+                            else obj.budget_usd - spent)
+        remaining_deadline = (None if obj.deadline_s is None
+                              else max(obj.deadline_s - elapsed, 0.0))
+        planner = RunPlanner(
+            self.graph, ctl.planning_factory(self.factory, now),
+            slots=self.slots,
+            store=self.store if self.use_cache else None,
+            preemption_aware=True)
+        try:
+            new_plan = planner.plan(
+                names, obj.constrained(budget_usd=remaining_budget,
+                                       deadline_s=remaining_deadline),
+                force=force, exclude=exclude)
+        except RuntimeError:
+            # e.g. every platform for some asset breaker-evicted AND
+            # infeasible — keep flying on the old plan
+            ctl.note_replanned(now, reasons, adopted=False)
+            return plan
+        adopted = new_plan.feasible
+        ctl.note_replanned(now, reasons, adopted=adopted)
+        self.reader.emit(
+            run_id, "", "", "", "REPLAN", reasons=reasons,
+            adopted=adopted, replans=ctl.replans,
+            pending_tasks=len(pending_keys),
+            predicted_cost_usd=new_plan.predicted_cost_usd,
+            predicted_makespan_s=new_plan.predicted_makespan_s)
+        # an infeasible remainder-plan (budget already blown, deadline
+        # already passed) is advice we cannot execute: keep the old plan
+        return new_plan if adopted else plan
 
     # ------------------------------------------------------------ internals
     def _dep_keys(self, dspec: AssetSpec, partition: str) -> list[str]:
@@ -506,23 +613,28 @@ class RunCoordinator:
         t.speculated = True
 
     def _bill(self, run_id: str, t: _Task, h: RunHandle,
-              est: CostEstimate | None) -> tuple[float, float]:
+              est: CostEstimate | None,
+              outcome: str = "success") -> tuple[float, float]:
         est_total = est.total_usd if est else 0.0
         est_dur = est.duration_s if est else 1e-9
         sim = h.sim_duration_s or max(h.finished - h.started, 1e-9)
         cost = est_total * (sim / max(est_dur, 1e-9))
+        # outcome + predicted duration ride along so the adaptive
+        # controller can learn realized/predicted ratios and success rates
+        # from the COST stream alone
         self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
                          "COST", total_usd=cost, duration_s=sim,
-                         attempt=t.attempt)
+                         attempt=t.attempt, outcome=outcome,
+                         est_duration_s=(est.duration_s if est else 0.0))
         return sim, cost
 
     def _record_failed_attempt(self, run_id: str, t: _Task, h: RunHandle,
                                est: CostEstimate | None) -> None:
         """A failed handle that does NOT end the task (e.g. a speculative
         twin): billed and recorded, no retry bookkeeping."""
-        sim, cost = self._bill(run_id, t, h, est)
         kind = (h.error.kind if isinstance(h.error, PlatformError)
                 else "failure")
+        sim, cost = self._bill(run_id, t, h, est, outcome=kind)
         t.record.attempts.append(AttemptRecord(
             h.platform, kind, sim, cost, speculative=True,
             error=str(h.error)))
@@ -533,7 +645,7 @@ class RunCoordinator:
     def _on_success(self, run_id: str, t: _Task, h: RunHandle,
                     est: CostEstimate | None, speculative: bool,
                     done: set) -> None:
-        sim, cost = self._bill(run_id, t, h, est)
+        sim, cost = self._bill(run_id, t, h, est, outcome="success")
         self.store.put(t.spec.name, t.partition, h.result, t.fingerprint,
                        meta={"platform": h.platform, "run_id": run_id},
                        code_version=t.code_version, upstream=t.upstream)
@@ -550,9 +662,9 @@ class RunCoordinator:
     def _on_failure(self, run_id: str, t: _Task, h: RunHandle,
                     est: CostEstimate | None, pending: list,
                     failed_hard: set) -> None:
-        sim, cost = self._bill(run_id, t, h, est)
         kind = (h.error.kind if isinstance(h.error, PlatformError)
                 else "failure")
+        sim, cost = self._bill(run_id, t, h, est, outcome=kind)
         t.record.attempts.append(AttemptRecord(
             h.platform, kind, sim, cost, error=str(h.error)))
         self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
@@ -570,6 +682,9 @@ class RunCoordinator:
                              "FAILOVER", deny=sorted(t.deny))
         self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
                          "RETRY", attempt=t.attempt + 1)
-        t.next_eligible = time.time() + t.spec.retry.backoff_s * t.attempt
+        # capped exponential backoff with deterministic per-task jitter
+        # (see RetryPolicy.delay_s) — retries decorrelate without RNG state
+        t.next_eligible = time.time() + t.spec.retry.delay_s(
+            t.attempt, (t.spec.name, t.partition))
         t.speculated = False  # the retry may speculate once again
         pending.append(t)

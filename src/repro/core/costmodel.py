@@ -63,9 +63,24 @@ class CostModel:
     """
 
     def __init__(self, hbm_gb_per_chip: float = 16.0,
-                 target_hours: float = 0.9):
+                 target_hours: float = 0.9,
+                 rework_fraction: float = 0.5):
         self.hbm_gb = hbm_gb_per_chip
         self.target_hours = target_hours
+        #: expected fraction of an attempt's duration lost when it fails or
+        #: is preempted mid-run (the simulated clients inject uniform(0.2,
+        #: 0.8) partial progress, mean 0.5) — drives ``schedule_duration``.
+        self.rework_fraction = rework_fraction
+
+    def _p_ok(self, platform: Platform, asset: str | None = None) -> float:
+        """Single-attempt success probability used for retry/rework math.
+
+        The base model only knows catalog beliefs; ``OnlineCostModel``
+        overrides this with per-(asset, platform) observed rates.  Every
+        consumer (scalar and batched) must go through this hook so the two
+        paths price identically.
+        """
+        return platform.p_success()
 
     def chips_for(self, asset: AssetSpec, platform: Platform) -> int:
         c = asset.compute
@@ -97,10 +112,39 @@ class CostModel:
                             surcharge, storage)
 
     def expected_cost_with_retries(self, est: CostEstimate,
-                                   platform: Platform) -> float:
+                                   platform: Platform,
+                                   asset: str | None = None) -> float:
         """Failures burn money: E[cost] = cost / P(success) (geometric)."""
-        p_ok = max(1e-3, 1.0 - platform.failure_rate - platform.preemption_rate)
-        return est.total_usd / p_ok
+        return est.total_usd / self._p_ok(platform, asset)
+
+    def schedule_duration(self, est: CostEstimate, platform: Platform,
+                          asset: str | None = None) -> float:
+        """Expected *wall-clock* duration including rework after failures
+        and preemptions: the geometric retry count E[attempts] = 1/p adds
+        (1/p - 1) failed attempts, each burning ``rework_fraction`` of the
+        nominal duration before dying.  This is what preemption-aware
+        scheduling loads onto the timeline (cost already has its own
+        ``expected_cost_with_retries`` term)."""
+        if not est.feasible:
+            return float("inf")
+        p_ok = self._p_ok(platform, asset)
+        return est.duration_s * (
+            1.0 + self.rework_fraction * (1.0 - p_ok) / p_ok)
+
+    # ------------------------------------------------------ subclass hooks
+    def _p_ok_col(self, platform: Platform,
+                  specs: Sequence[AssetSpec]) -> np.ndarray:
+        """Per-asset success probabilities on ``platform`` as a column.
+        Must produce exactly the floats ``_p_ok`` returns per asset."""
+        return np.full(len(specs), self._p_ok(platform))
+
+    def _dur_ratio_col(self, platform: Platform,
+                       specs: Sequence[AssetSpec]) -> np.ndarray | None:
+        """Per-asset realized/predicted duration ratios (``None`` = no
+        scaling).  The static model has no observations; ``OnlineCostModel``
+        returns its EWMA ratios here so batched pricing sees the same
+        corrections as scalar ``estimate``."""
+        return None
 
     # ------------------------------------------------------------ batched
     def estimate_batch(self, specs: Sequence[AssetSpec],
@@ -109,11 +153,12 @@ class CostModel:
         assets x platforms in one numpy pass.
 
         Returns ``[n_assets, n_platforms]`` arrays: ``duration_s``,
-        ``total_usd``, ``expected_usd`` (retry-aware), the ``CostEstimate``
-        components (``compute_s``, ``base_usd``, ``surcharge_usd``,
-        ``storage_usd``) and a boolean ``feasible`` mask (infeasible cells
-        carry +inf duration/cost, zero surcharge/storage — same as the
-        scalar path).  The arithmetic mirrors the scalar path op-for-op so
+        ``total_usd``, ``expected_usd`` (retry-aware), ``sched_duration_s``
+        (rework-aware wall clock, see ``schedule_duration``), the
+        ``CostEstimate`` components (``compute_s``, ``base_usd``,
+        ``surcharge_usd``, ``storage_usd``) and a boolean ``feasible`` mask
+        (infeasible cells carry +inf duration/cost, zero surcharge/storage —
+        same as the scalar path).  The arithmetic mirrors the scalar path op-for-op so
         batch and scalar pricing agree bit-for-bit — the planner prices
         10k-task DAGs through this instead of a per-task Python loop, and
         re-assembles per-choice ``CostEstimate`` objects from these columns
@@ -134,13 +179,15 @@ class CostModel:
         duration = np.full(shape, np.inf)
         total = np.full(shape, np.inf)
         expected = np.full(shape, np.inf)
+        sched_duration = np.full(shape, np.inf)
         compute = np.full(shape, np.inf)
         base_usd = np.full(shape, np.inf)
         surcharge_usd = np.zeros(shape)
         storage_usd = np.zeros(shape)
         feasible = np.zeros(shape, dtype=bool)
         out = {"duration_s": duration, "total_usd": total,
-               "expected_usd": expected, "compute_s": compute,
+               "expected_usd": expected, "sched_duration_s": sched_duration,
+               "compute_s": compute,
                "base_usd": base_usd, "surcharge_usd": surcharge_usd,
                "storage_usd": storage_usd, "feasible": feasible}
         if n == 0:
@@ -176,11 +223,24 @@ class CostModel:
             base = hours * chips_f * p.chip_hour_usd
             surch = base * p.surcharge_rate
             stor = hours * chips_f * p.storage_usd_per_chip_hour
+            ratio = self._dur_ratio_col(p, specs)
+            if ratio is not None:
+                # Mirror the scalar OnlineCostModel path: scale each
+                # component, then re-sum — NOT tot * ratio, which rounds
+                # differently and would break scalar/batch bit-identity.
+                dur = dur * ratio
+                compute_s = compute_s * ratio
+                base = base * ratio
+                surch = surch * ratio
+                stor = stor * ratio
             tot = base + surch + stor
-            p_ok = max(1e-3, 1.0 - p.failure_rate - p.preemption_rate)
+            pok = self._p_ok_col(p, specs)
+            sched = dur * (
+                1.0 + self.rework_fraction * (1.0 - pok) / pok)
             duration[:, j] = np.where(ok, dur, np.inf)
             total[:, j] = np.where(ok, tot, np.inf)
-            expected[:, j] = np.where(ok, tot / p_ok, np.inf)
+            expected[:, j] = np.where(ok, tot / pok, np.inf)
+            sched_duration[:, j] = np.where(ok, sched, np.inf)
             compute[:, j] = np.where(ok, compute_s, np.inf)
             base_usd[:, j] = np.where(ok, base, np.inf)
             surcharge_usd[:, j] = np.where(ok, surch, 0.0)

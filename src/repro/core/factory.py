@@ -78,7 +78,8 @@ class DynamicClientFactory:
         est = self.cost_model.estimate(spec, platform)
         if not est.feasible:
             return float("inf"), est
-        exp_cost = self.cost_model.expected_cost_with_retries(est, platform)
+        exp_cost = self.cost_model.expected_cost_with_retries(
+            est, platform, spec.name)
         score = exp_cost + self.objective.time_value_usd_per_hour * (
             est.duration_s / 3600.0)
         return score, est
@@ -86,7 +87,8 @@ class DynamicClientFactory:
     def choose(self, spec: AssetSpec,
                deny: set[str] | None = None) -> tuple[Platform, CostEstimate]:
         deny = deny or set()
-        if spec.platform_hint and spec.platform_hint not in deny:
+        if spec.platform_hint and spec.platform_hint not in deny \
+                and spec.platform_hint in self.catalog:
             p = self.catalog[spec.platform_hint]
             return p, self.cost_model.estimate(spec, p)
         best: tuple[float, str, CostEstimate] | None = None

@@ -81,7 +81,11 @@ class _Candidates:
     platforms: list[str]  # column order: sorted platform names
     cost: np.ndarray  # [n_assets, n_platforms] expected USD, inf = excluded
     dur: np.ndarray  # [n_assets, n_platforms] seconds, inf = excluded
-    rows: np.ndarray  # [n_tasks] task -> asset row
+    #: what the *schedule* sees: == ``dur`` normally, or the rework-aware
+    #: ``sched_duration_s`` under preemption-aware planning (failures and
+    #: preemptions stretch the timeline, not just the expected cost)
+    sched: np.ndarray = None
+    rows: np.ndarray = None  # [n_tasks] task -> asset row
     #: CostEstimate component columns (same [n_assets, n_platforms] layout)
     #: so final choices are assembled without per-task scalar ``estimate``
     compute_s: np.ndarray = None
@@ -213,7 +217,8 @@ class RunPlanner:
     def __init__(self, graph: AssetGraph, factory: DynamicClientFactory,
                  max_iterations: int | None = None,
                  slots: SlotConfig | None = SlotConfig(),
-                 store: MaterializationStore | None = None):
+                 store: MaterializationStore | None = None,
+                 preemption_aware: bool = False):
         self.graph = graph
         self.factory = factory
         #: hard cap on optimization moves per plan; None (default) scales
@@ -223,6 +228,13 @@ class RunPlanner:
         self.max_iterations = max_iterations
         self.slots = slots
         self.store = store
+        #: schedule on rework-aware durations (``sched_duration_s``): each
+        #: task's timeline slot is stretched by expected retry rework on its
+        #: platform, so flaky-platform assignments pay in *makespan*, not
+        #: just expected cost.  Off by default — nominal durations keep the
+        #: planner's makespan prediction aligned with a coordinator replay
+        #: of the no-failure case; the adaptive coordinator turns it on.
+        self.preemption_aware = preemption_aware
 
     # ------------------------------------------------------------ pricing
     def _candidates(self, keys: list[TaskKey]) -> _Candidates:
@@ -241,16 +253,23 @@ class RunPlanner:
             specs, [self.factory.catalog[p] for p in platforms])
         cost = batch["expected_usd"].copy()
         dur = batch["duration_s"].copy()
+        sched = (batch["sched_duration_s"].copy() if self.preemption_aware
+                 else dur)
         for i, spec in enumerate(specs):
-            if spec.platform_hint:
+            # a hint naming a platform outside the catalog (e.g. evicted by
+            # an open circuit breaker) is ignored rather than made
+            # unsatisfiable
+            if spec.platform_hint and spec.platform_hint in platforms:
                 for j, pname in enumerate(platforms):
                     if pname != spec.platform_hint:
                         cost[i, j] = dur[i, j] = np.inf
+                        sched[i, j] = np.inf
             if not np.isfinite(cost[i]).any():
                 raise RuntimeError(
                     f"no feasible platform for asset {spec.name!r}")
         rows = np.asarray([row_of[name] for name, _ in keys], dtype=np.int64)
-        return _Candidates(assets, platforms, cost, dur, rows,
+        return _Candidates(assets, platforms, cost, dur, sched=sched,
+                           rows=rows,
                            compute_s=batch["compute_s"],
                            base_usd=batch["base_usd"],
                            surcharge_usd=batch["surcharge_usd"],
@@ -281,10 +300,20 @@ class RunPlanner:
     # ----------------------------------------------------------------- api
     def plan(self, targets: "AssetSelection | str | list[str] | None" = None,
              objective: Objective | None = None,
-             force: bool = False) -> RunPlan:
+             force: bool = False,
+             exclude: "set[TaskKey] | None" = None) -> RunPlan:
+        """``exclude`` drops (asset, partition) tasks from the plan — the
+        mid-run replan path passes everything already done or in flight.
+        The set must be predecessor-closed (every predecessor of an excluded
+        task is itself excluded), which done+running sets are by
+        construction: a task only launches once its deps finished."""
         obj = objective or self.factory.objective
         names = AssetSelection.coerce(targets).resolve(self.graph)
         keys, preds = task_dag(self.graph, names)
+        if exclude:
+            keys = [k for k in keys if k not in exclude]
+            preds = {k: [p for p in preds[k] if p not in exclude]
+                     for k in keys}
         cached_keys: list[TaskKey] = []
         if self.store is not None and not force:
             staleness = resolve_staleness(self.graph, self.store, names)
@@ -304,8 +333,10 @@ class RunPlanner:
         plat_arr = np.asarray(cand.platforms)
 
         def load(cols: np.ndarray) -> float:
-            """Full schedule pass for an assignment; returns PERT makespan."""
-            return engine.load(cand.dur[rows, cols], plat_arr[cols])
+            """Full schedule pass for an assignment; returns PERT makespan.
+            Schedules on ``cand.sched`` (== ``dur`` unless preemption-aware
+            planning inflated it with expected rework)."""
+            return engine.load(cand.sched[rows, cols], plat_arr[cols])
 
         def slot_ms() -> SlotSchedule:
             return engine.slot_schedule()
@@ -334,7 +365,7 @@ class RunPlanner:
         # provable lower bounds first: the infinite-width makespan of the
         # fastest assignment lower-bounds any schedule under any slots, and
         # the cheapest assignment lower-bounds any plan's cost.
-        fastest_cols = self._argmin_rows(cand.dur, cand.cost)[rows] \
+        fastest_cols = self._argmin_rows(cand.sched, cand.cost)[rows] \
             if len(rows) else np.zeros(0, dtype=np.int64)
         fastest_pert = load(fastest_cols)
         cheapest_cols = self._argmin_rows(cand.cost, cand.dur)[rows] \
@@ -534,7 +565,7 @@ class RunPlanner:
             return []
         r = cand.rows[idx]
         cur_c = cand.cost[r, cols[idx]]
-        save = dur[idx][:, None] - cand.dur[r]  # [k, m]
+        save = dur[idx][:, None] - cand.sched[r]  # [k, m]
         dcost = cand.cost[r] - cur_c[:, None]
         with np.errstate(invalid="ignore"):
             rate = save / np.maximum(dcost, 1e-9)
@@ -611,7 +642,7 @@ class RunPlanner:
                     (j for j in range(len(cand.platforms))
                      if np.isfinite(cand.cost[r, j]) and
                      cand.cost[r, j] < cur_c),
-                    key=lambda j: (cand.cost[r, j], cand.dur[r, j], j))
+                    key=lambda j: (cand.cost[r, j], cand.sched[r, j], j))
                 opt_cache[ck] = out
             return out
 
@@ -627,13 +658,13 @@ class RunPlanner:
                 t = int(t)
                 r = rows[t]
                 cur_col = int(cols[t])
-                cur_d = cand.dur[r, cur_col]
+                cur_d = cand.sched[r, cur_col]
                 for j in options(r, cur_col):
-                    extra = cand.dur[r, j] - cur_d
+                    extra = cand.sched[r, j] - cur_d
                     if extra > slack[t] * (1 + 1e-12) + 1e-9:
                         continue  # cannot fit even in this task's slack
                     ms, undo = engine.try_duration(
-                        t, cand.dur[r, j], cand.platforms[j])
+                        t, cand.sched[r, j], cand.platforms[j])
                     if ms <= cap:
                         cols[t] = j
                         improved = True

@@ -54,6 +54,13 @@ class Platform:
         """USD per chip-hour including surcharge."""
         return self.chip_hour_usd * (1.0 + self.surcharge_rate)
 
+    def p_success(self) -> float:
+        """Catalog belief of a single attempt succeeding (floored so the
+        geometric retry expectation stays finite) — the one expression every
+        retry/rework computation must share so scalar and batched pricing
+        agree bit-for-bit."""
+        return max(1e-3, 1.0 - self.failure_rate - self.preemption_rate)
+
 
 def default_catalog() -> dict[str, Platform]:
     """Calibrated to Table 1 economics (spot ~ EMR, premium ~ DBR)."""

@@ -204,7 +204,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def plan_preview(objective_name: str, time_value: float,
                  budget_usd: float | None, deadline_h: float | None,
-                 plan_rows: int = 50, select: str | None = None) -> None:
+                 plan_rows: int = 50, select: str | None = None,
+                 adaptive: bool = False,
+                 drift: "list[str] | None" = None) -> None:
     """Orchestration dry-run: global planner assignment for the paper's
     Common-Crawl pipeline, printed as a per-task table (truncated past
     ``plan_rows`` tasks with a per-asset/platform summary) with predicted
@@ -212,10 +214,17 @@ def plan_preview(objective_name: str, time_value: float,
     jax work involved.  ``select`` is an asset-selection expression (e.g.
     ``"cc_fetch+"`` for an asset plus its downstream cone, ``"tag:k=v"``,
     ``"*"``) parsed by ``repro.core.selection.AssetSelection.parse`` — the
-    same surface ``RunCoordinator.plan()/materialize()`` accept."""
+    same surface ``RunCoordinator.plan()/materialize()`` accept.
+
+    ``adaptive`` previews the closed-loop planner: pricing goes through an
+    ``OnlineCostModel`` and scheduling is preemption-aware (each task's
+    timeline slot inflated by expected retry rework on its platform).
+    ``drift`` entries of the form ``asset@platform=ratio`` seed the online
+    model with assumed realized/predicted duration ratios — "what would the
+    plan look like if cc_edges ran 3x slow on pod-spot?"."""
     from repro.core import (AssetSelection, CostModel, DynamicClientFactory,
-                            Objective, RunPlanner, SlotConfig,
-                            default_catalog)
+                            Objective, OnlineCostModel, RunPlanner,
+                            SlotConfig, default_catalog)
 
     try:
         from benchmarks.cc_pipeline import SMALL, build_graph
@@ -239,11 +248,29 @@ def plan_preview(objective_name: str, time_value: float,
     }[objective_name]().constrained(budget_usd=budget_usd,
                                     deadline_s=None if deadline_h is None
                                     else deadline_h * 3600.0)
-    factory = DynamicClientFactory(default_catalog(), CostModel(), objective)
+    cost_model = CostModel()
+    if adaptive or drift:
+        online = OnlineCostModel(base=cost_model)
+        for spec_str in drift or []:
+            # asset@platform=ratio, e.g. cc_edges@pod-spot=3.0 — seed the
+            # EWMA well past min_observations so the ratio dominates
+            lhs, _, ratio = spec_str.partition("=")
+            a, _, p = lhs.partition("@")
+            if not (a and p and ratio):
+                raise SystemExit(f"bad --drift {spec_str!r} "
+                                 f"(want asset@platform=ratio)")
+            for _ in range(8):
+                online.observe(a, p, "success", predicted_s=1.0,
+                               realized_s=float(ratio))
+        cost_model = online
+    factory = DynamicClientFactory(default_catalog(), cost_model, objective)
     # the default SlotConfig matches RunCoordinator's execution limits, so
     # the previewed makespan accounts for finite per-platform slots
-    plan = RunPlanner(graph, factory, slots=SlotConfig()).plan(selection)
-    print(f"run plan ({objective.name}, select={select or default_sel!r}, "
+    plan = RunPlanner(graph, factory, slots=SlotConfig(),
+                      preemption_aware=adaptive or bool(drift)).plan(selection)
+    mode = " adaptive" if adaptive or drift else ""
+    print(f"run plan ({objective.name}{mode}, "
+          f"select={select or default_sel!r}, "
           f"{len(plan.choices)} tasks, {plan.iterations} iterations):")
     print(plan.table(max_rows=plan_rows))
 
@@ -271,12 +298,21 @@ def main() -> None:
                     help="asset selection for --plan, e.g. 'cc_fetch+' "
                          "(asset + downstream cone), '+graph_aggr', "
                          "'tag:stage=ingest', '*'")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="with --plan: preview the closed-loop planner "
+                         "(online cost model + preemption-aware schedule)")
+    ap.add_argument("--drift", action="append", default=None,
+                    metavar="ASSET@PLATFORM=RATIO",
+                    help="with --plan: seed an assumed duration drift, e.g. "
+                         "cc_edges@pod-spot=3.0 (repeatable; implies "
+                         "adaptive pricing)")
     args = ap.parse_args()
 
     if args.plan:
         plan_preview(args.objective, args.time_value, args.budget_usd,
                      args.deadline_h, plan_rows=args.plan_rows,
-                     select=args.select)
+                     select=args.select, adaptive=args.adaptive,
+                     drift=args.drift)
         return
 
     if args.list:

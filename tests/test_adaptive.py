@@ -1,0 +1,413 @@
+"""Closed-loop adaptation: online cost model (scalar/batch bit-identity),
+drift detection, circuit breakers, retry backoff, telemetry ring buffer and
+end-to-end drift-triggered replanning."""
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveConfig, AssetGraph, CircuitBreaker,
+                        ComputeProfile, CostModel, DriftDetector,
+                        DynamicClientFactory, MessageReader, Objective,
+                        OnlineCostModel, RetryPolicy, RunCoordinator,
+                        RunPlanner, SimulatedClusterClient, SlotConfig,
+                        StaticPartitions, asset, default_catalog)
+
+CATALOG = default_catalog()
+PLATFORMS = list(CATALOG.values())
+
+
+def _specs():
+    light = asset(name="light",
+                  compute=ComputeProfile(work_chip_hours=2.3,
+                                         speedup_class="light"))(lambda ctx: 1)
+    heavy = asset(name="heavy",
+                  compute=ComputeProfile(work_chip_hours=2200.0,
+                                         speedup_class="scan"))(lambda ctx: 1)
+    analytic = asset(name="analytic",
+                     compute=ComputeProfile(flops=1e18, bytes_hbm=1e14,
+                                            min_chips=4))(lambda ctx: 1)
+    return [light, heavy, analytic]
+
+
+def _assert_scalar_batch_agree(model):
+    """estimate_batch must equal scalar estimate cell-for-cell, bit-exact."""
+    specs = _specs()
+    batch = model.estimate_batch(specs, PLATFORMS)
+    for i, s in enumerate(specs):
+        for j, p in enumerate(PLATFORMS):
+            est = model.estimate(s, p)
+            assert batch["feasible"][i, j] == est.feasible
+            assert batch["duration_s"][i, j] == est.duration_s
+            assert batch["compute_s"][i, j] == est.compute_s
+            assert batch["base_usd"][i, j] == est.base_usd
+            if est.feasible:
+                assert batch["surcharge_usd"][i, j] == est.surcharge_usd
+                assert batch["storage_usd"][i, j] == est.storage_usd
+                assert batch["total_usd"][i, j] == est.total_usd
+                assert batch["expected_usd"][i, j] == \
+                    model.expected_cost_with_retries(est, p, s.name)
+                assert batch["sched_duration_s"][i, j] == \
+                    model.schedule_duration(est, p, s.name)
+
+
+# --------------------------------------------------------------- cost model
+def test_pristine_online_model_bit_identical_to_static():
+    """Zero observations: every scalar field and every batch column of the
+    online model equals the static model's, bit for bit."""
+    static, online = CostModel(), OnlineCostModel()
+    specs = _specs()
+    for s in specs:
+        for p in PLATFORMS:
+            es, eo = static.estimate(s, p), online.estimate(s, p)
+            assert es == eo
+            if es.feasible:
+                assert static.expected_cost_with_retries(es, p, s.name) == \
+                    online.expected_cost_with_retries(eo, p, s.name)
+                assert static.schedule_duration(es, p, s.name) == \
+                    online.schedule_duration(eo, p, s.name)
+    sb = static.estimate_batch(specs, PLATFORMS)
+    ob = online.estimate_batch(specs, PLATFORMS)
+    for col in sb:
+        assert np.array_equal(sb[col], ob[col]), col
+
+
+def test_scalar_batch_agree_after_observations():
+    model = OnlineCostModel()
+    for i in range(8):
+        model.observe("light", "pod-spot", "success",
+                      predicted_s=100.0, realized_s=100.0 * (1.5 + 0.1 * i))
+        model.observe("heavy", "pod-spot",
+                      "preemption" if i % 3 == 0 else "success",
+                      predicted_s=500.0, realized_s=1400.0)
+        model.observe("light", "pod-premium", "failure")
+    _assert_scalar_batch_agree(model)
+
+
+def test_scalar_batch_agree_property():
+    """Arbitrary telemetry replays never break scalar/batch bit-identity."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    obs = st.tuples(
+        st.sampled_from(["light", "heavy", "analytic", "unseen"]),
+        st.sampled_from(sorted(CATALOG)),
+        st.sampled_from(["success", "failure", "preemption", "cancelled"]),
+        st.floats(0.0, 1e4),
+        st.floats(0.0, 1e9))
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(st.lists(obs, max_size=40))
+    def check(replay):
+        model = OnlineCostModel()
+        for a, p, outcome, pred, real in replay:
+            model.observe(a, p, outcome, predicted_s=pred, realized_s=real)
+        _assert_scalar_batch_agree(model)
+
+    check()
+
+
+def test_duration_ratio_learning_blend_and_clamp():
+    cfg = AdaptiveConfig(prior_strength=4.0)
+    model = OnlineCostModel(config=cfg)
+    assert model.duration_ratio("light", "pod-spot") == 1.0
+    for _ in range(6):
+        model.observe("light", "pod-spot", "success",
+                      predicted_s=100.0, realized_s=300.0)
+    r = model.duration_ratio("light", "pod-spot")
+    assert 1.5 < r < 3.0  # shrunk toward the prior, pulled toward 3.0
+    # platform-level generalization: an asset never observed on pod-spot
+    # still inherits the platform's drift (that is what lets a replan move
+    # big tasks *before* they burn an attempt on a drifted platform)
+    assert model.duration_ratio("heavy", "pod-spot") > 1.3
+    # ...but other platforms stay pristine
+    assert model.duration_ratio("light", "pod-premium") == 1.0
+    # clamping: absurd observed ratios cannot explode pricing
+    for _ in range(50):
+        model.observe("light", "pod-spot", "success",
+                      predicted_s=1.0, realized_s=1e6)
+    assert model.duration_ratio("light", "pod-spot") == cfg.ratio_max
+
+
+def test_online_p_ok_learns_failures():
+    model = OnlineCostModel()
+    p = CATALOG["pod-premium"]
+    prior = p.p_success()
+    for _ in range(10):
+        model.observe("light", "pod-premium", "failure")
+    assert model._p_ok(p, "light") < prior
+    # cross-asset: the platform-level success EWMA drags other assets too
+    assert model._p_ok(p, "heavy") < prior
+    assert model._p_ok(CATALOG["pod-spot"], "light") == \
+        CATALOG["pod-spot"].p_success()
+
+
+# ------------------------------------------------------------------ drift
+def test_drift_detector_ratio_breach_and_rebaseline():
+    cfg = AdaptiveConfig(min_observations=3, ratio_threshold=1.4)
+    model = OnlineCostModel(config=cfg)
+    det = DriftDetector(model, cfg)
+    for _ in range(4):
+        model.observe("light", "pod-spot", "success",
+                      predicted_s=100.0, realized_s=300.0)
+        det.observe("light", "pod-spot", "success")
+    reasons = det.check()
+    assert any("duration drift light@pod-spot" in r for r in reasons)
+    det.mark_replanned()  # the new plan already prices these beliefs
+    assert det.check() == []
+
+
+def test_drift_detector_failure_burst_and_preemption_streak():
+    cfg = AdaptiveConfig(failure_burst=3, preemption_streak=3)
+    det = DriftDetector(OnlineCostModel(config=cfg), cfg)
+    for _ in range(3):
+        det.observe("a", "pod-spot", "failure")
+    assert any("failure burst on pod-spot" in r for r in det.check())
+    det.mark_replanned()
+    for _ in range(3):
+        det.observe("a", "multipod-spot", "preemption")
+    assert any("preemption streak on multipod-spot" in r
+               for r in det.check())
+    # a success interrupts the streak
+    det.mark_replanned()
+    det.observe("a", "multipod-spot", "preemption")
+    det.observe("a", "multipod-spot", "preemption")
+    det.observe("a", "multipod-spot", "success")
+    det.observe("a", "multipod-spot", "preemption")
+    assert det.check() == []
+
+
+# ----------------------------------------------------------------- breaker
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker("pod-spot", failures=3, cooldown_s=10.0)
+    t = 100.0
+    assert br.record("failure", t) is None
+    assert br.record("failure", t) is None
+    assert br.allow(t)
+    assert br.record("failure", t) == "open"  # 3rd consecutive trips it
+    assert not br.allow(t + 9.9)
+    assert br.allow(t + 10.0)  # cooldown elapsed -> half-open
+    assert br.state == "half-open"
+    br.note_launch(t + 10.0)
+    assert not br.allow(t + 10.1)  # single probe in flight
+    assert br.record("failure", t + 11.0) == "open"  # probe failed
+    assert not br.allow(t + 12.0)
+    assert br.allow(t + 21.0)  # second cooldown
+    br.note_launch(t + 21.0)
+    assert br.record("success", t + 22.0) == "closed"
+    assert br.allow(t + 22.0)
+    assert br.trips == 2
+
+
+def test_circuit_breaker_preemptions_neutral():
+    br = CircuitBreaker("pod-spot", failures=2)
+    assert br.record("failure", 0.0) is None
+    # preemptions neither trip (expected on spot) nor reset (no evidence of
+    # health) the consecutive-failure count
+    assert br.record("preemption", 0.0) is None
+    assert br.state == "closed"
+    assert br.record("failure", 0.0) == "open"
+
+
+# ----------------------------------------------------------------- backoff
+def test_retry_backoff_capped_exponential():
+    r = RetryPolicy(max_attempts=6, backoff_s=0.2, backoff_cap_s=1.0,
+                    jitter=0.0)
+    assert [r.delay_s(a) for a in range(1, 6)] == [0.2, 0.4, 0.8, 1.0, 1.0]
+    assert RetryPolicy(backoff_s=0.0).delay_s(3) == 0.0
+
+
+def test_retry_backoff_jitter_deterministic_and_bounded():
+    r = RetryPolicy(backoff_s=0.2, backoff_cap_s=30.0, jitter=0.25)
+    a = r.delay_s(2, ("edges", "p0"))
+    assert a == r.delay_s(2, ("edges", "p0"))  # no RNG state: replayable
+    b = r.delay_s(2, ("edges", "p1"))
+    assert a != b  # retries across tasks decorrelate (no thundering herd)
+    for key in [("edges", "p0"), ("edges", "p1"), ("nodes", "p0")]:
+        for attempt in range(1, 5):
+            d = r.delay_s(attempt, key)
+            base = min(0.2 * 2.0 ** (attempt - 1), 30.0)
+            assert base * 0.75 <= d <= base * 1.25
+
+
+# --------------------------------------------------------------- telemetry
+def _feed(reader):
+    for i in range(30):
+        reader.emit("r1", f"a{i % 3}", "p", "pod-spot", "COST",
+                    total_usd=float(i), duration_s=10.0 * i, outcome="success")
+        reader.emit("r1", f"a{i % 3}", "p", "pod-spot", "SUCCESS",
+                    duration_s=10.0 * i)
+        if i % 5 == 0:
+            reader.emit("r1", f"a{i % 3}", "p", "multipod-spot", "FAILURE",
+                        failure_kind="preemption" if i % 2 else "failure")
+        if i % 7 == 0:
+            reader.emit("r1", f"a{i % 3}", "p", "cache", "CACHE_HIT")
+
+
+def test_ring_buffer_compaction_preserves_aggregates():
+    bounded, unbounded = MessageReader(max_events=16), MessageReader()
+    _feed(bounded)
+    _feed(unbounded)
+    assert len(bounded.events()) <= 16
+    assert bounded.evicted_events > 0
+    assert unbounded.evicted_events == 0
+    assert bounded.outcome_counts() == unbounded.outcome_counts()
+    assert bounded.total_cost() == pytest.approx(unbounded.total_cost())
+    assert bounded.total_cost("pod-spot") == \
+        pytest.approx(unbounded.total_cost("pod-spot"))
+    assert bounded.cost_by_asset() == pytest.approx(unbounded.cost_by_asset())
+    stats_b = bounded.cache_stats("r1")
+    stats_u = unbounded.cache_stats("r1")
+    assert stats_b["cache_hits"] == stats_u["cache_hits"]
+    assert stats_b["executed"] == stats_u["executed"]
+    # compacted durations degrade gracefully to the lifetime mean
+    assert bounded.median_duration("a0") is not None
+
+
+def test_events_since_cursor():
+    reader = MessageReader()
+    reader.emit("r", "a", "p", "x", "START")
+    reader.emit("r", "a", "p", "x", "SUCCESS", duration_s=1.0)
+    first = reader.events_since(0)
+    assert [e.seq for e in first] == [0, 1]
+    cursor = first[-1].seq + 1
+    assert reader.events_since(cursor) == []
+    reader.emit("r", "a", "p", "x", "COST", total_usd=1.0)
+    nxt = reader.events_since(cursor)
+    assert [e.kind for e in nxt] == ["COST"]
+
+
+def test_max_events_validation():
+    with pytest.raises(ValueError):
+        MessageReader(max_events=1)
+
+
+# ----------------------------------------------------------------- planner
+def _pair_graph(parts):
+    a = asset(name="a", partitions=parts,
+              compute=ComputeProfile(work_chip_hours=0.2))(lambda ctx: 1)
+    b = asset(name="b", deps=("a",), partitions=parts,
+              compute=ComputeProfile(work_chip_hours=150.0,
+                                     speedup_class="scan"),
+              retry=RetryPolicy(max_attempts=4, backoff_s=0.0,
+                                failover_after=2))(lambda ctx, a: a + 1)
+    return AssetGraph([a, b])
+
+
+def test_planner_exclude_drops_tasks():
+    parts = StaticPartitions(("p0", "p1"))
+    graph = _pair_graph(parts)
+    factory = DynamicClientFactory(default_catalog(), CostModel(),
+                                   Objective.balanced())
+    planner = RunPlanner(graph, factory, store=None)
+    full = planner.plan(["b"])
+    assert set(full.choices) == {("a", "p0"), ("a", "p1"),
+                                 ("b", "p0"), ("b", "p1")}
+    # mid-run replan: a's tasks already done/in flight (predecessor-closed)
+    part = planner.plan(["b"], exclude={("a", "p0"), ("a", "p1")})
+    assert part.feasible
+    assert set(part.choices) == {("b", "p0"), ("b", "p1")}
+
+
+# -------------------------------------------------------------- end to end
+def _fleet_factory(objective, builder):
+    catalog = {k: p for k, p in default_catalog().items() if k != "local"}
+    return DynamicClientFactory(catalog, CostModel(), objective,
+                                client_builder=builder)
+
+
+def test_adaptive_replan_migrates_before_big_tasks_launch():
+    """pod-spot runs 4x slower than the catalog promises: the small ``a``
+    tasks teach the online model, drift fires, and the big ``b`` tasks are
+    replanned onto honest capacity before ever launching on pod-spot."""
+    parts = StaticPartitions(("p0", "p1"))
+    graph = _pair_graph(parts)
+
+    def slow_spot(p):
+        return SimulatedClusterClient(
+            p, sim_time_scale=2e-5, failure_rate=0.0, preemption_rate=0.0,
+            duration_bias=4.0 if p.name == "pod-spot" else 1.0)
+
+    cfg = AdaptiveConfig(min_observations=1, prior_strength=1.0,
+                         replan_cooldown_s=0.0)
+    static = RunCoordinator(
+        _pair_graph(parts), _fleet_factory(Objective.min_cost(), slow_spot),
+        use_cache=False, enable_speculation=False)
+    plan = static.plan("b")
+    assert {c.platform for c in plan.choices.values()} == {"pod-spot"}
+
+    reader = MessageReader()
+    coord = RunCoordinator(
+        graph, _fleet_factory(Objective.min_cost(), slow_spot),
+        reader=reader, use_cache=False, enable_speculation=False,
+        slots=SlotConfig(max_concurrent=2, platform_slots=2,
+                         elastic_max_slots=2),
+        adaptive=cfg)
+    report = coord.materialize("b", run_id="drift-e2e", plan=plan)
+    assert report.ok
+    replans = [e for e in reader.events() if e.kind == "REPLAN"]
+    assert replans and replans[0].payload["adopted"]
+    assert any("duration drift" in r or "drift" in r
+               for r in replans[0].payload["reasons"])
+    b_platforms = {r.platform for r in report.records if r.asset == "b"}
+    assert "pod-spot" not in b_platforms  # the migration actually happened
+
+
+def test_breaker_evicts_sick_platform_fleet_wide():
+    """pod-spot hard-fails every attempt: after ``breaker_failures``
+    consecutive failures the breaker opens and *every* subsequent task is
+    denied pod-spot — without burning its own per-task retry budget there."""
+    parts = StaticPartitions(tuple(f"p{i}" for i in range(4)))
+    graph = _pair_graph(parts)
+
+    def broken_spot(p):
+        return SimulatedClusterClient(
+            p, failure_rate=1.0 if p.name == "pod-spot" else 0.0,
+            preemption_rate=0.0)
+
+    cfg = AdaptiveConfig(breaker_failures=2, breaker_cooldown_s=600.0,
+                         min_observations=100)  # isolate the breaker path
+    reader = MessageReader()
+    coord = RunCoordinator(
+        graph, _fleet_factory(Objective.min_cost(), broken_spot),
+        reader=reader, use_cache=False, enable_speculation=False,
+        adaptive=cfg)
+    report = coord.materialize("b", run_id="breaker-e2e")
+    assert report.ok
+    opened = [e for e in reader.events()
+              if e.kind == "BREAKER" and e.payload["state"] == "open"]
+    assert [e.platform for e in opened][:1] == ["pod-spot"]
+    # every task finished off the sick platform
+    assert all(r.attempts[-1].platform != "pod-spot"
+               for r in report.records)
+    # fleet-wide denial: pod-spot saw at most breaker_failures + a couple
+    # in-flight attempts, NOT len(tasks) * failover_after attempts
+    spot_failures = sum(
+        1 for r in report.records for a in r.attempts
+        if a.platform == "pod-spot")
+    assert spot_failures <= 4
+
+
+def test_zero_drift_adaptive_run_matches_static():
+    """With honest platforms the closed loop must not replan or diverge."""
+    parts = StaticPartitions(("p0", "p1"))
+
+    def honest(p):
+        return SimulatedClusterClient(p, failure_rate=0.0,
+                                      preemption_rate=0.0)
+
+    plan = RunCoordinator(
+        _pair_graph(parts), _fleet_factory(Objective.min_cost(), honest),
+        use_cache=False, enable_speculation=False).plan("b")
+    reports = []
+    for adaptive in (None, AdaptiveConfig()):
+        reader = MessageReader()
+        coord = RunCoordinator(
+            _pair_graph(parts), _fleet_factory(Objective.min_cost(), honest),
+            reader=reader, use_cache=False, enable_speculation=False,
+            adaptive=adaptive)
+        reports.append(coord.materialize("b", run_id="parity", plan=plan))
+        assert not [e for e in reader.events() if e.kind == "REPLAN"]
+    static, closed = reports
+    assert static.ok and closed.ok
+    assert {(r.asset, r.partition, r.platform) for r in static.records} == \
+        {(r.asset, r.partition, r.platform) for r in closed.records}
+    assert static.total_cost == pytest.approx(closed.total_cost)

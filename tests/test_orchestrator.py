@@ -233,7 +233,11 @@ def test_telemetry_outcome_counts():
     reader = MessageReader()
     reader.emit("r", "a", "p", "pod-spot", "SUCCESS", duration_s=1.0)
     reader.emit("r", "a", "p", "pod-spot", "FAILURE")
+    reader.emit("r", "a", "p", "pod-spot", "FAILURE", failure_kind="preemption")
     reader.emit("r", "a", "p", "pod-premium", "SUCCESS", duration_s=2.0)
     counts = reader.outcome_counts()
-    assert counts["pod-spot"] == {"success": 1, "failure": 1, "cancelled": 0}
+    # preemptions get their own bucket instead of inflating "failure"
+    assert counts["pod-spot"] == {"success": 1, "failure": 1,
+                                  "preemption": 1, "cancelled": 0}
+    assert counts["pod-premium"]["preemption"] == 0
     assert np.isclose(reader.median_duration("a"), 1.5)
