@@ -1,0 +1,70 @@
+"""CI gate: compare a fresh BENCH_recovery(_smoke).json against the
+committed baseline and fail on crash-recovery regressions.
+
+Usage (what .github/workflows/ci.yml runs after ``recovery_bench.py
+--smoke``):
+
+    python benchmarks/check_recovery_regression.py \
+        --current BENCH_recovery_smoke.json \
+        --baseline benchmarks/baselines/recovery_baseline.json
+
+Two kinds of check:
+
+* **correctness booleans** — every entry in the current run's ``checks``
+  must hold: at each kill point (25/50/75% of the journal record stream)
+  the kill fired, resume completed, no billing idempotency key appears
+  twice, spend equals the uninterrupted same-run_id reference, the store
+  is byte-identical to it, and rework is bounded by the crash frontier.
+  These are machine-independent semantics; any failure is a regression
+  outright.
+* **journaling overhead ceiling** — ``overhead.overhead_frac`` (journaled
+  vs plain happy-path wall-clock, min-of-repeats, identical simulated
+  schedules) must stay under the baseline's ``max_overhead_frac``.  The
+  ratio is self-normalizing across runners (both arms run in the same
+  process on the same disk), and the ceiling (5%) sits far above the
+  observed value (<1%), so only a genuine durability-path regression —
+  extra fsyncs per record, journal writes off the happy path — can trip
+  it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_recovery_smoke.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/recovery_baseline.json")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures: list[str] = []
+    for name, ok in sorted(cur.get("checks", {}).items()):
+        if not ok:
+            failures.append(f"check failed: {name}")
+    ceiling = base.get("max_overhead_frac", 0.05)
+    frac = cur.get("overhead", {}).get("overhead_frac", 1.0)
+    if frac > ceiling:
+        failures.append(f"journaling overhead {frac * 100:.1f}% above the "
+                        f"{ceiling * 100:.0f}% ceiling")
+
+    print(f"recovery gate: journaling overhead {frac * 100:.1f}% "
+          f"(ceiling {ceiling * 100:.0f}%), "
+          f"{len(cur.get('checks', {}))} checks")
+    if failures:
+        for fmsg in failures:
+            print(f"REGRESSION: {fmsg}", file=sys.stderr)
+        return 1
+    print("OK: no crash-recovery regression")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

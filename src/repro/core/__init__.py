@@ -10,6 +10,10 @@ from repro.core.context import ContextInjector, RunContext  # noqa: F401
 from repro.core.coordinator import RunCoordinator, RunReport  # noqa: F401
 from repro.core.costmodel import CostEstimate, CostModel  # noqa: F401
 from repro.core.factory import DynamicClientFactory, Objective  # noqa: F401
+from repro.core.faults import (ClientFaults, CoordinatorKilled,  # noqa: F401
+                               FaultPlan)
+from repro.core.journal import (JournalCorruption, JournalState,  # noqa: F401
+                                RunJournal)
 from repro.core.partitions import (MultiPartitions, PartitionsDefinition,  # noqa: F401
                                    StaticPartitions, TimeWindowPartitions,
                                    dep_partition_keys)
@@ -20,5 +24,6 @@ from repro.core.schedule import (ScheduleEngine, SlotConfig,  # noqa: F401
                                  SlotSchedule, task_dag)
 from repro.core.selection import AssetSelection  # noqa: F401
 from repro.core.store import (MaterializationStore, Staleness,  # noqa: F401
-                              code_version, resolve_staleness, source_hash)
+                              StoreCorruption, code_version,
+                              resolve_staleness, source_hash)
 from repro.core.telemetry import Event, MessageReader  # noqa: F401

@@ -377,6 +377,10 @@ class AdaptiveController:
             outcome = e.payload.get("outcome")
             if not outcome:
                 continue  # pre-adaptive emitter: nothing to learn from
+            if e.payload.get("prepaid"):
+                # resumed re-execution of an attempt the crashed run billed:
+                # its journal BILL was already folded in by ``warm_start``
+                continue
             outcomes += 1
             self.model.observe(e.asset, e.platform, outcome,
                                predicted_s=e.payload.get("est_duration_s", 0.0),
@@ -388,6 +392,25 @@ class AdaptiveController:
                 if t is not None:
                     transitions.append((e.platform, t))
         return outcomes, transitions
+
+    def warm_start(self, bills: list[dict]) -> None:
+        """Resume support: fold a crashed run's journaled BILL records in
+        as though their COST events had been ingested live, so the
+        replacement run starts with everything the dead run learned
+        (duration ratios, success rates, breaker states) instead of the
+        static catalog priors."""
+        for b in bills:
+            p = b["payload"]
+            outcome = p.get("outcome")
+            if not outcome:
+                continue
+            self.model.observe(b["asset"], b["platform"], outcome,
+                               predicted_s=p.get("est_duration_s", 0.0),
+                               realized_s=p.get("sim_duration_s", 0.0))
+            self.detector.observe(b["asset"], b["platform"], outcome)
+            br = self.breakers.get(b["platform"])
+            if br is not None:
+                br.record(outcome, now=b.get("ts", 0.0))
 
     # ------------------------------------------------------------- breakers
     def open_platforms(self, now: float) -> set[str]:

@@ -28,7 +28,9 @@ from repro.core.assets import AssetGraph, AssetSpec
 from repro.core.clients import JobSpec, PlatformError, RunHandle
 from repro.core.context import ContextInjector
 from repro.core.costmodel import CostEstimate
-from repro.core.factory import DynamicClientFactory
+from repro.core.factory import DynamicClientFactory, Objective
+from repro.core.faults import FaultPlan
+from repro.core.journal import JournalState, RunJournal
 from repro.core.partitions import dep_partition_keys, partition_keys
 from repro.core.planner import RunPlan, RunPlanner
 from repro.core.schedule import ScheduleEngine, SlotConfig, task_dag
@@ -167,6 +169,10 @@ class _Task:
     fingerprint: str = ""
     code_version: str = ""
     upstream: dict[str, str] = dataclasses.field(default_factory=dict)
+    #: resume: attempt -> platform the crashed run had launched it on, so
+    #: re-execution replays the same (run_id, asset, partition, attempt,
+    #: platform) key — deterministic clients then reproduce the attempt
+    replay: dict[int, str] = dataclasses.field(default_factory=dict)
 
 
 class RunCoordinator:
@@ -183,7 +189,9 @@ class RunCoordinator:
                  use_cache: bool = True,
                  slots: SlotConfig | None = None,
                  adaptive: "AdaptiveController | AdaptiveConfig | bool | None"
-                 = None):
+                 = None,
+                 journal_dir: str | None = None,
+                 faults: FaultPlan | None = None):
         graph.validate()
         self.graph = graph
         self.factory = factory
@@ -211,6 +219,19 @@ class RunCoordinator:
                                           adaptive)
         self.adaptive: AdaptiveController | None = adaptive or None
         self._dep_key_cache: dict[tuple[str, str], list[str]] = {}
+        # crash consistency (see core/journal.py): with ``journal_dir`` set,
+        # every task lifecycle transition is fsync'd to an append-only
+        # write-ahead log and ``resume(run_id)`` can reopen a killed run.
+        # ``faults`` threads a seeded FaultPlan through the journal's
+        # record-boundary kill points (chaos testing).
+        self.journal_dir = journal_dir
+        self.faults = faults
+        self._jrnl: RunJournal | None = None
+        # (asset, partition, attempt) -> (sim_s, cost_usd) for attempts the
+        # crashed run already billed but whose output never landed: the
+        # resumed re-execution carries the journaled bill instead of
+        # emitting a second one (exactly-once billing)
+        self._prepaid: dict[tuple[str, str, int], tuple[float, float]] = {}
 
     # legacy attribute style stays writable, but reads/writes go through
     # self.slots so the launch loop and plan() can never disagree
@@ -265,12 +286,14 @@ class RunCoordinator:
                     targets: "AssetSelection | str | list[str] | None" = None,
                     run_id: str | None = None,
                     plan: RunPlan | None = None,
-                    force: bool = False) -> RunReport:
+                    force: bool = False,
+                    _prior: JournalState | None = None) -> RunReport:
         """Execute the target selection.  ``targets`` accepts an
         ``AssetSelection``, a CLI selection string, the legacy ``list[str]``
         or ``None`` (everything); upstream deps are always materialized (or
         served from cache) as needed.  ``force`` bypasses the cache and
-        rebuilds every selected task."""
+        rebuilds every selected task.  ``_prior`` is internal: the replayed
+        journal state ``resume`` reconciles a crashed run from."""
         if plan is not None and not plan.feasible:
             raise ValueError(f"refusing to execute infeasible plan: "
                              f"{plan.reason}")
@@ -289,6 +312,45 @@ class RunCoordinator:
                 rec = TaskRecord(asset=name, partition=key)
                 records.append(rec)
                 tasks[(name, key)] = _Task(spec=spec, partition=key, record=rec)
+
+        # write-ahead journal: BEGIN (fresh run) / RESUME (reopened run)
+        # is durable before any task is touched
+        self._prepaid = {}
+        jrnl = self._jrnl = (
+            RunJournal(self.journal_dir, run_id, faults=self.faults)
+            if self.journal_dir is not None else None)
+        if jrnl is not None:
+            if _prior is None:
+                jrnl.append(
+                    "BEGIN", targets=names, force=force,
+                    planned=plan is not None, use_cache=self.use_cache,
+                    adaptive=self.adaptive is not None,
+                    objective={
+                        "name": base_obj.name,
+                        "time_value_usd_per_hour":
+                            base_obj.time_value_usd_per_hour,
+                        "budget_usd": base_obj.budget_usd,
+                        "deadline_s": base_obj.deadline_s,
+                    })
+            else:
+                jrnl.append(
+                    "RESUME", resumes=_prior.resumes + 1,
+                    spent_usd=round(_prior.spent_usd(), 6),
+                    dropped_records=_prior.dropped_records,
+                    frontier=sorted(f"{a}[{p}]"
+                                    for a, p in _prior.frontier()))
+        try:
+            return self._run(run_id, base_obj, names, tasks, records, plan,
+                             force, _prior)
+        finally:
+            if jrnl is not None:
+                jrnl.close()
+            self._jrnl = None
+
+    def _run(self, run_id: str, base_obj, names: list[str],
+             tasks: dict[tuple[str, str], _Task], records: list[TaskRecord],
+             plan: RunPlan | None, force: bool,
+             _prior: JournalState | None) -> RunReport:
 
         # upfront per-(asset, partition) staleness resolution: pessimistic
         # verdicts (stale upstream poisons downstream) drive telemetry and
@@ -344,6 +406,8 @@ class RunCoordinator:
         cver: dict[str, str] = {}  # asset -> code version (memoized)
 
         pending = list(tasks.values())
+        if _prior is not None:
+            self._apply_prior(run_id, _prior, tasks, done, pending)
         while pending or running:
             # ---------------- launch ready tasks ------------------------
             now = time.time()
@@ -379,9 +443,33 @@ class RunCoordinator:
                     self.reader.emit(run_id, t.spec.name, t.partition,
                                      "cache", "SUCCESS", duration_s=0.0,
                                      cached=True)
+                    if self._jrnl is not None:
+                        self._jrnl.append(
+                            "SUCCESS", asset=t.spec.name,
+                            partition=t.partition, platform="cache",
+                            cached=True, fingerprint=fp,
+                            data_hash=self.store.data_hash(
+                                t.spec.name, t.partition))
+                    # a resumed prepaid attempt resolved by early cutoff
+                    # (upstream re-ran byte-identical): the crashed run's
+                    # bill still belongs in this report
+                    for pk in [k for k in self._prepaid
+                               if k[:2] == (t.spec.name, t.partition)]:
+                        sim_p, cost_p = self._prepaid.pop(pk)
+                        t.record.attempts.append(AttemptRecord(
+                            t.replay.get(pk[2], ""), "success", sim_p,
+                            cost_p))
                     continue
                 platform = est = None
-                if plan is not None:
+                # resume replay: the crashed run journaled a LAUNCH for the
+                # attempt we are about to make — re-launch it on the same
+                # platform so the deterministic client key (run, asset,
+                # partition, attempt, platform) reproduces the attempt
+                rp = t.replay.get(t.attempt + 1)
+                if rp is not None and rp in self.factory.catalog:
+                    platform = self.factory.catalog[rp]
+                    est = self.factory.cost_model.estimate(t.spec, platform)
+                if plan is not None and platform is None:
                     pc = plan.choice(t.spec.name, t.partition)
                     if (pc is not None and pc.platform not in t.deny
                             and pc.platform not in open_plats
@@ -434,6 +522,15 @@ class RunCoordinator:
                                  est_usd=est.total_usd,
                                  est_duration_s=est.duration_s,
                                  planned=plan is not None)
+                if self._jrnl is not None:
+                    # WAL ordering: the LAUNCH record is durable before the
+                    # job exists — a crash between the two re-launches an
+                    # attempt that never ran (harmless), never the reverse
+                    # (an attempt running with no record of it)
+                    self._jrnl.append(
+                        "LAUNCH", asset=t.spec.name, partition=t.partition,
+                        platform=platform.name, attempt=t.attempt,
+                        est_usd=est.total_usd, est_duration_s=est.duration_s)
                 t.handle = self.factory.client(platform).submit(job)
                 t.launched_at = now
                 if self.adaptive is not None:
@@ -501,7 +598,12 @@ class RunCoordinator:
                 plan = self._adaptive_step(run_id, names, base_obj, plan,
                                            tasks, pending, records, force)
 
-        return RunReport(run_id=run_id, records=records, graph=self.graph)
+        report = RunReport(run_id=run_id, records=records, graph=self.graph)
+        if self._jrnl is not None:
+            self._jrnl.append("END", ok=report.ok,
+                              total_cost_usd=round(report.total_cost, 6),
+                              tasks=len(records))
+        return report
 
     def _adaptive_step(self, run_id: str, names: list[str], base_obj,
                        plan: RunPlan | None, tasks: dict,
@@ -557,6 +659,10 @@ class RunCoordinator:
             pending_tasks=len(pending_keys),
             predicted_cost_usd=new_plan.predicted_cost_usd,
             predicted_makespan_s=new_plan.predicted_makespan_s)
+        if self._jrnl is not None:
+            self._jrnl.append("REPLAN", adopted=adopted, reasons=reasons,
+                              replans=ctl.replans,
+                              pending=len(pending_keys))
         # an infeasible remainder-plan (budget already blown, deadline
         # already passed) is advice we cannot execute: keep the old plan
         return new_plan if adopted else plan
@@ -606,6 +712,10 @@ class RunCoordinator:
                        else {k: self.store.get(d, k) for k in keys})
         job = JobSpec(fn=t.spec.fn, args=(), kwargs=vals, ctx=ctx,
                       estimate=est)
+        if self._jrnl is not None:
+            self._jrnl.append(
+                "LAUNCH", asset=t.spec.name, partition=t.partition,
+                platform=platform.name, attempt=t.attempt, speculative=True)
         t.spec_handle = self.factory.client(platform).submit(job)
         t.spec_estimate = est
         self.reader.emit(run_id, t.spec.name, t.partition, platform.name,
@@ -613,18 +723,35 @@ class RunCoordinator:
         t.speculated = True
 
     def _bill(self, run_id: str, t: _Task, h: RunHandle,
-              est: CostEstimate | None,
-              outcome: str = "success") -> tuple[float, float]:
-        est_total = est.total_usd if est else 0.0
-        est_dur = est.duration_s if est else 1e-9
-        sim = h.sim_duration_s or max(h.finished - h.started, 1e-9)
-        cost = est_total * (sim / max(est_dur, 1e-9))
+              est: CostEstimate | None, outcome: str = "success",
+              speculative: bool = False) -> tuple[float, float]:
+        # exactly-once billing across crashes: an attempt the crashed run
+        # already billed (success journaled, output never landed) carries
+        # its journaled money forward instead of paying twice
+        prepaid = (self._prepaid.pop((t.spec.name, t.partition, t.attempt),
+                                     None) if not speculative else None)
+        if prepaid is not None:
+            sim, cost = prepaid
+        else:
+            est_total = est.total_usd if est else 0.0
+            est_dur = est.duration_s if est else 1e-9
+            sim = h.sim_duration_s or max(h.finished - h.started, 1e-9)
+            cost = est_total * (sim / max(est_dur, 1e-9))
+        if self._jrnl is not None and prepaid is None:
+            # money truth: the BILL record is durable before the store put /
+            # telemetry — resume trusts the journal, never re-derives spend
+            self._jrnl.append(
+                "BILL", asset=t.spec.name, partition=t.partition,
+                platform=h.platform, attempt=t.attempt, cost_usd=cost,
+                sim_duration_s=sim, outcome=outcome, speculative=speculative,
+                est_duration_s=(est.duration_s if est else 0.0))
         # outcome + predicted duration ride along so the adaptive
         # controller can learn realized/predicted ratios and success rates
         # from the COST stream alone
         self.reader.emit(run_id, t.spec.name, t.partition, h.platform,
                          "COST", total_usd=cost, duration_s=sim,
                          attempt=t.attempt, outcome=outcome,
+                         prepaid=prepaid is not None,
                          est_duration_s=(est.duration_s if est else 0.0))
         return sim, cost
 
@@ -634,7 +761,8 @@ class RunCoordinator:
         twin): billed and recorded, no retry bookkeeping."""
         kind = (h.error.kind if isinstance(h.error, PlatformError)
                 else "failure")
-        sim, cost = self._bill(run_id, t, h, est, outcome=kind)
+        sim, cost = self._bill(run_id, t, h, est, outcome=kind,
+                               speculative=True)
         t.record.attempts.append(AttemptRecord(
             h.platform, kind, sim, cost, speculative=True,
             error=str(h.error)))
@@ -645,10 +773,22 @@ class RunCoordinator:
     def _on_success(self, run_id: str, t: _Task, h: RunHandle,
                     est: CostEstimate | None, speculative: bool,
                     done: set) -> None:
-        sim, cost = self._bill(run_id, t, h, est, outcome="success")
+        # write ordering contract: BILL (journal) -> put (store) -> SUCCESS
+        # (journal).  A crash after BILL but before put leaves a success-
+        # billed attempt with no data: resume re-runs it prepaid.  A crash
+        # after put but before SUCCESS leaves landed data: resume trusts
+        # the store (data truth) and marks the task done.
+        sim, cost = self._bill(run_id, t, h, est, outcome="success",
+                               speculative=speculative)
         self.store.put(t.spec.name, t.partition, h.result, t.fingerprint,
                        meta={"platform": h.platform, "run_id": run_id},
                        code_version=t.code_version, upstream=t.upstream)
+        if self._jrnl is not None:
+            self._jrnl.append(
+                "SUCCESS", asset=t.spec.name, partition=t.partition,
+                platform=h.platform, attempt=t.attempt,
+                fingerprint=t.fingerprint, speculative=speculative,
+                data_hash=self.store.data_hash(t.spec.name, t.partition))
         t.record.attempts.append(AttemptRecord(
             h.platform, "success", sim, cost, speculative))
         t.record.status = "success"
@@ -673,6 +813,14 @@ class RunCoordinator:
         if t.attempt >= t.spec.retry.max_attempts:
             t.record.status = "failed"
             failed_hard.add((t.spec.name, t.partition))
+            if self._jrnl is not None:
+                # durable tombstone: resume refuses to retry past an
+                # exhausted budget instead of silently re-running the task
+                self._jrnl.append(
+                    "FAIL", asset=t.spec.name, partition=t.partition,
+                    platform=h.platform, attempt=t.attempt,
+                    error=str(h.error))
+                self._jrnl.append("END", ok=False)
             raise RuntimeError(
                 f"asset {t.spec.name}[{t.partition}] failed after "
                 f"{t.attempt} attempts: {h.error}")
@@ -688,3 +836,173 @@ class RunCoordinator:
             t.attempt, (t.spec.name, t.partition))
         t.speculated = False  # the retry may speculate once again
         pending.append(t)
+
+    # ------------------------------------------------------------ resume
+    @staticmethod
+    def _attempt_from_bill(b: dict) -> AttemptRecord:
+        p = b["payload"]
+        return AttemptRecord(
+            b["platform"], p.get("outcome", "success"),
+            p.get("sim_duration_s", 0.0), p.get("cost_usd", 0.0),
+            speculative=bool(p.get("speculative")))
+
+    def _apply_prior(self, run_id: str, prior: JournalState,
+                     tasks: dict[tuple[str, str], _Task], done: set,
+                     pending: list) -> None:
+        """Reconcile the replayed journal against the store and prefill the
+        fresh task table so only the crash frontier re-executes.
+
+        Per task: *done* iff its output landed (store record written by this
+        run, or a journaled SUCCESS whose record still exists — the store is
+        data truth, the journal is money truth); journaled FAIL re-raises
+        (the retry budget was exhausted durably); everything else replays —
+        terminal bills prefill attempts/deny/backoff state, a success bill
+        whose put never landed becomes *prepaid* (re-executed, not re-billed)
+        and in-flight launches pin their attempt to the journaled platform
+        so deterministic clients reproduce the interrupted attempt."""
+        for tk, t in tasks.items():
+            asset, part = tk
+            bills = prior.bills_by_task.get(tk, [])
+            if tk in prior.failed:
+                if self._jrnl is not None:
+                    self._jrnl.append("END", ok=False)
+                raise RuntimeError(
+                    f"asset {asset}[{part}] hard-failed in run "
+                    f"{prior.run_id} (journaled FAIL after "
+                    f"{max((b['attempt'] for b in bills), default=0)} "
+                    f"attempts); resume will not retry past an exhausted "
+                    f"attempt budget")
+            rec = self.store.record(asset, part)
+            landed = rec is not None and (
+                tk in prior.succeeded
+                or rec.get("meta", {}).get("run_id") == run_id)
+            if landed:
+                # a landed output only counts if every upstream it was built
+                # from is itself carried-done with an unchanged data hash
+                # (tasks iterate in topo order, so deps resolved first) — a
+                # quarantined/re-running upstream demotes this task to the
+                # frontier rather than letting it serve stale data
+                for d in t.spec.deps:
+                    for k in self._dep_keys(self.graph[d], part):
+                        h = self.store.data_hash(d, k)
+                        if (d, k) not in done or h is None or \
+                                rec.get("upstream", {}).get(
+                                    f"{d}[{k}]") != h:
+                            landed = False
+                            break
+                    if not landed:
+                        break
+            if landed:
+                # durably done: carry the journaled money into the report
+                for b in bills:
+                    t.record.attempts.append(self._attempt_from_bill(b))
+                t.record.status = "success"
+                t.record.cached = bool(
+                    prior.succeeded.get(tk, {}).get("payload", {})
+                    .get("cached"))
+                t.attempt = max((b["attempt"] for b in bills), default=0)
+                done.add(tk)
+                pending.remove(t)
+                self.reader.emit(run_id, asset, part, rec.get(
+                    "meta", {}).get("platform", ""), "CARRIED",
+                    attempts=len(bills))
+                continue
+            # replays: prefill terminal attempts the crashed run paid for
+            success_bill = None
+            for b in bills:
+                if b["payload"].get("outcome") == "success" \
+                        and success_bill is None:
+                    success_bill = b  # goes prepaid, not into the report
+                    continue
+                t.record.attempts.append(self._attempt_from_bill(b))
+                if not b["payload"].get("speculative") \
+                        and b["attempt"] >= t.spec.retry.failover_after:
+                    t.deny.add(b["platform"])
+            failed_attempts = prior.terminal_attempts(tk)
+            t.attempt = max(failed_attempts, default=0)
+            if len(failed_attempts) >= t.spec.retry.max_attempts \
+                    and success_bill is None:
+                raise RuntimeError(
+                    f"asset {asset}[{part}] exhausted its "
+                    f"{t.spec.retry.max_attempts}-attempt budget in run "
+                    f"{prior.run_id}; refusing to resume past it")
+            if success_bill is not None:
+                # crash fell between BILL and store.put: re-execute the
+                # attempt, but carry the journaled money (exactly-once)
+                p = success_bill["payload"]
+                self._prepaid[(asset, part, success_bill["attempt"])] = (
+                    p.get("sim_duration_s", 0.0), p.get("cost_usd", 0.0))
+                t.replay[success_bill["attempt"]] = success_bill["platform"]
+                t.attempt = success_bill["attempt"] - 1
+            else:
+                orphans = prior.in_flight().get(tk, [])
+                if orphans:
+                    # the launch the crash cut down: same attempt number +
+                    # platform -> the deterministic client replays it
+                    a = max(r["attempt"] for r in orphans)
+                    for r in orphans:
+                        t.replay[r["attempt"]] = r["platform"]
+                    t.attempt = a - 1
+
+    def _prior_makespan(self, prior: JournalState) -> float:
+        """Simulated elapsed time the crashed run already consumed,
+        reconstructed from its BILL records (feeds remaining-deadline)."""
+        recs = []
+        for tk, bills in prior.bills_by_task.items():
+            r = TaskRecord(asset=tk[0], partition=tk[1])
+            r.attempts = [self._attempt_from_bill(b) for b in bills]
+            r.status = "success" if tk in prior.succeeded else "pending"
+            recs.append(r)
+        return RunReport(prior.run_id, recs, self.graph).makespan_s()
+
+    def resume(self, run_id: str, replan: bool = True) -> RunReport:
+        """Reopen a crashed run from its write-ahead journal.
+
+        Replays the journal (torn-tail tolerant), sweeps the target cone's
+        store records for integrity (corrupt blobs quarantine and re-run),
+        warm-starts the adaptive controller from journaled bills, replans
+        the remainder under the *remaining* budget/deadline, then executes
+        only the crash frontier — done work is carried, billed attempts are
+        never billed twice."""
+        if self.journal_dir is None:
+            raise ValueError("resume() requires a coordinator constructed "
+                             "with journal_dir")
+        recs, dropped = RunJournal.load(self.journal_dir, run_id)
+        prior = JournalState.from_records(recs, dropped)
+        if prior.ended and prior.ok:
+            raise ValueError(f"run {run_id} already ended ok; "
+                             f"nothing to resume")
+        names = AssetSelection.coerce(prior.targets).resolve(self.graph)
+        for name in self.graph.topo_order(names):
+            for key in partition_keys(self.graph[name].partitions):
+                self.store.verify(name, key)
+        if self.adaptive is not None and prior.bills:
+            self.adaptive.warm_start(prior.bills)
+        plan = None
+        if replan and prior.planned:
+            obj = Objective(
+                name=prior.objective.get("name",
+                                         self.factory.objective.name),
+                time_value_usd_per_hour=prior.objective.get(
+                    "time_value_usd_per_hour",
+                    self.factory.objective.time_value_usd_per_hour),
+                budget_usd=prior.objective.get("budget_usd"),
+                deadline_s=prior.objective.get("deadline_s"))
+            remaining_budget = (
+                None if obj.budget_usd is None
+                else max(obj.budget_usd - prior.spent_usd(), 0.0))
+            remaining_deadline = (
+                None if obj.deadline_s is None
+                else max(obj.deadline_s - self._prior_makespan(prior), 0.0))
+            try:
+                plan = self.plan(names, obj.constrained(
+                    budget_usd=remaining_budget,
+                    deadline_s=remaining_deadline))
+            except RuntimeError:
+                plan = None
+            if plan is not None and not plan.feasible:
+                # an unplannable remainder (budget already blown) must not
+                # strand the run: fall back to greedy best-effort recovery
+                plan = None
+        return self.materialize(names, run_id=run_id, plan=plan,
+                                force=prior.force, _prior=prior)

@@ -15,6 +15,7 @@ from repro.core.assets import AssetSpec
 from repro.core.clients import (LocalClient, PlatformClient,
                                 SimulatedClusterClient)
 from repro.core.costmodel import CostEstimate, CostModel
+from repro.core.faults import FaultPlan
 from repro.core.platforms import Platform
 
 
@@ -60,7 +61,8 @@ class DynamicClientFactory:
     def __init__(self, catalog: dict[str, Platform], cost_model: CostModel,
                  objective: Objective,
                  client_builder: Callable[[Platform], PlatformClient] | None = None,
-                 sim_seed: int = 0, sim_time_scale: float = 0.0):
+                 sim_seed: int = 0, sim_time_scale: float = 0.0,
+                 faults: "FaultPlan | None" = None):
         self.catalog = dict(catalog)
         self.cost_model = cost_model
         self.objective = objective
@@ -68,6 +70,10 @@ class DynamicClientFactory:
         self._builder = client_builder
         self.sim_seed = sim_seed
         self.sim_time_scale = sim_time_scale
+        #: seeded chaos plan (core/faults.py): client-level overrides win
+        #: over both the default builder and a custom ``client_builder``,
+        #: so one FaultPlan degrades a platform for every consumer
+        self.faults = faults
 
     # ----------------------------------------------------------- selection
     def estimates(self, spec: AssetSpec) -> dict[str, CostEstimate]:
@@ -106,7 +112,18 @@ class DynamicClientFactory:
     # -------------------------------------------------------------- clients
     def client(self, platform: Platform) -> PlatformClient:
         if platform.name not in self._clients:
-            if self._builder is not None:
+            cf = (self.faults.client_faults(platform.name)
+                  if self.faults is not None else None)
+            if cf is not None:
+                # deterministic degraded reality for this platform: the
+                # catalog's beliefs stay untouched (that gap is the point)
+                self._clients[platform.name] = SimulatedClusterClient(
+                    platform, seed=self.sim_seed,
+                    sim_time_scale=self.sim_time_scale,
+                    failure_rate=cf.failure_rate,
+                    preemption_rate=cf.preemption_rate,
+                    duration_bias=cf.slowdown)
+            elif self._builder is not None:
                 self._clients[platform.name] = self._builder(platform)
             elif platform.kind == "local":
                 self._clients[platform.name] = LocalClient(platform)

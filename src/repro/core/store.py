@@ -37,6 +37,7 @@ import pickle
 import textwrap
 import threading
 import time
+import warnings
 from typing import TYPE_CHECKING, Any, Callable
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (assets -> store)
@@ -50,6 +51,48 @@ _BLOBS = "blobs"
 
 def _short(h: "hashlib._Hash") -> str:
     return h.hexdigest()[:16]
+
+
+class StoreCorruption(UserWarning):
+    """On-disk store state (index or blob) failed integrity validation."""
+
+
+def _quarantine(path: str, suffix: str = "corrupt") -> str | None:
+    """Move a damaged file aside as ``<path>.<suffix>-<n>`` (never clobbers
+    an earlier quarantine) so post-mortems keep the evidence while the
+    store carries on without it."""
+    n = 0
+    while True:
+        target = f"{path}.{suffix}-{n}"
+        if not os.path.exists(target):
+            break
+        n += 1
+    try:
+        os.replace(path, target)
+    except OSError:
+        return None
+    return target
+
+
+def _durable_write(path: str, data: bytes) -> None:
+    """Crash-safe file publish: write tmp, flush+fsync, rename, fsync the
+    directory.  Without the fsyncs, ``os.replace`` alone can leave a
+    zero-length (or stale) file *behind the final name* after power loss —
+    the rename may hit disk before the data does."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    try:
+        fd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    except OSError:  # pragma: no cover - non-posix directory open
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 _source_hash_cache: dict[Callable, str] = {}
@@ -139,15 +182,35 @@ class MaterializationStore:
 
     def _load_index(self) -> None:
         """Replace in-memory records with the on-disk index (source of
-        truth for disk-backed stores)."""
+        truth for disk-backed stores).
+
+        A corrupt or truncated ``index.json`` (torn write, disk fault) must
+        not brick store construction: the bad file is quarantined to
+        ``index.json.corrupt-<n>`` with a warning and the store starts
+        empty — the content-addressed blobs remain on disk, so identical
+        re-materializations are still write-once and quarantined evidence
+        survives for post-mortems."""
         path = self._index_path()
         if not os.path.exists(path):
             return
-        with open(path) as f:
-            data = json.load(f)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            records = {(r["asset"], r["partition"]): r
+                       for r in data.get("records", [])}
+        except (json.JSONDecodeError, UnicodeDecodeError, KeyError,
+                TypeError, OSError) as e:
+            moved = _quarantine(path)
+            warnings.warn(
+                f"materialization index {path} is corrupt ({e!r}); "
+                f"quarantined to {moved or '<unmovable>'} and starting from "
+                f"the blobs that remain", StoreCorruption, stacklevel=2)
+            with self._lock:
+                self._mem = {}
+                self._index_mtime = time.time()
+            return
         with self._lock:
-            self._mem = {(r["asset"], r["partition"]): r
-                         for r in data.get("records", [])}
+            self._mem = records
             self._index_mtime = os.path.getmtime(path)
 
     def reload(self) -> None:
@@ -162,11 +225,9 @@ class MaterializationStore:
         records = [{k: v for k, v in rec.items() if k != "value"}
                    for rec in self._mem.values()]
         path = self._index_path()
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"version": 2, "records": records}, f, indent=1,
-                      sort_keys=True)
-        os.replace(tmp, path)
+        _durable_write(path, json.dumps(
+            {"version": 2, "records": records}, indent=1,
+            sort_keys=True).encode())
         self._index_mtime = os.path.getmtime(path)
 
     def _maybe_refresh(self, key: TaskKey) -> None:
@@ -198,9 +259,7 @@ class MaterializationStore:
             rel = os.path.join(_BLOBS, f"{data_hash}.pkl")
             path = os.path.join(self.dir, rel)
             if not os.path.exists(path):  # content-addressed: write once
-                with open(path + ".tmp", "wb") as f:
-                    f.write(blob)
-                os.replace(path + ".tmp", path)
+                _durable_write(path, blob)
             rec["path"] = rel
         else:
             rec["value"] = value
@@ -210,13 +269,64 @@ class MaterializationStore:
         return rec
 
     def get(self, asset: str, partition: str) -> Any:
+        """Load a materialized value, verifying disk bytes against the
+        record's ``data_hash`` first: a corrupted or truncated blob is
+        quarantined and its record dropped (demoted to never-materialized),
+        so callers see a clean ``KeyError`` instead of a raw pickle error —
+        or worse, silently wrong data."""
         rec = self.record(asset, partition)
         if rec is None:
             raise KeyError(f"no materialization for {asset}[{partition}]")
         if "value" in rec:
             return rec["value"]
-        with open(os.path.join(self.dir, rec["path"]), "rb") as f:
-            return pickle.load(f)
+        blob = self._read_verified(asset, partition, rec)
+        if blob is None:
+            raise KeyError(f"no materialization for {asset}[{partition}] "
+                           f"(blob failed integrity check; quarantined)")
+        return pickle.loads(blob)
+
+    def _read_verified(self, asset: str, partition: str,
+                       rec: dict) -> bytes | None:
+        """Blob bytes iff they hash to the record's ``data_hash``; on any
+        mismatch/IO error the blob is quarantined and the record dropped."""
+        path = os.path.join(self.dir, rec["path"])
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+        except OSError:
+            blob = None
+        if blob is not None and \
+                _short(hashlib.sha1(blob)) == rec.get("data_hash"):
+            return blob
+        moved = _quarantine(path) if blob is not None else None
+        warnings.warn(
+            f"blob for {asset}[{partition}] failed integrity check "
+            f"(want data_hash {rec.get('data_hash')}); "
+            f"{'quarantined to ' + moved if moved else 'unreadable'} — "
+            f"record demoted to never-materialized", StoreCorruption,
+            stacklevel=3)
+        bad_path = rec["path"]
+        with self._lock:
+            doomed = [k for k, r in self._mem.items()
+                      if r.get("path") == bad_path]
+            for k in doomed:
+                del self._mem[k]
+            if doomed:
+                self._persist_locked()
+        return None
+
+    def verify(self, asset: str, partition: str) -> bool:
+        """True iff a record exists *and* its blob bytes match
+        ``data_hash``.  Corrupt blobs are quarantined and their records
+        dropped as a side effect — ``resume`` sweeps this over a run's
+        cone so crash-corrupted outputs re-run instead of poisoning
+        downstream tasks."""
+        rec = self.record(asset, partition)
+        if rec is None:
+            return False
+        if "value" in rec or not self.dir or "path" not in rec:
+            return True
+        return self._read_verified(asset, partition, rec) is not None
 
     def record(self, asset: str, partition: str) -> dict | None:
         key = (asset, partition)

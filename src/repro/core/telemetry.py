@@ -126,6 +126,14 @@ class MessageReader:
         with self._lock:
             return self._evicted
 
+    @property
+    def min_live_seq(self) -> int:
+        """Smallest seq still in the live window (= next seq when empty).
+        A consumer whose cursor is older than this has lost events to
+        compaction — ``events_since`` cannot return them."""
+        with self._lock:
+            return self._events[0].seq if self._events else self._next_seq
+
     # ------------------------------------------------------------ access
     def events(self, kind: str | None = None, asset: str | None = None,
                platform: str | None = None) -> list[Event]:

@@ -275,6 +275,26 @@ def plan_preview(objective_name: str, time_value: float,
     print(plan.table(max_rows=plan_rows))
 
 
+def resume_preview(journal_dir: str, run_id: str) -> None:
+    """Crash-recovery dry-run: replay a run journal (torn-tail tolerant)
+    and print what ``RunCoordinator.resume`` would do — landed work,
+    money already spent, and the in-flight frontier it would re-launch —
+    without executing anything."""
+    from repro.core import JournalState, RunJournal
+
+    if not RunJournal.exists(journal_dir, run_id):
+        raise SystemExit(f"no journal for run {run_id!r} in {journal_dir}")
+    records, dropped = RunJournal.load(journal_dir, run_id)
+    state = JournalState.from_records(records, dropped)
+    print(state.summary())
+    if state.ended and state.ok:
+        print("run ended ok: nothing to resume")
+    else:
+        print(f"resume would re-launch {len(state.frontier())} frontier "
+              f"task(s) and carry {len(state.succeeded)} landed "
+              f"materialization(s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None, help="one arch (default: all)")
@@ -306,7 +326,19 @@ def main() -> None:
                     help="with --plan: seed an assumed duration drift, e.g. "
                          "cc_edges@pod-spot=3.0 (repeatable; implies "
                          "adaptive pricing)")
+    ap.add_argument("--resume", default=None, metavar="RUN_ID",
+                    help="preview crash recovery for a journaled run: "
+                         "replay its journal and print landed/billed/"
+                         "frontier state (requires --journal-dir)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="run-journal directory for --resume")
     args = ap.parse_args()
+
+    if args.resume:
+        if not args.journal_dir:
+            raise SystemExit("--resume requires --journal-dir")
+        resume_preview(args.journal_dir, args.resume)
+        return
 
     if args.plan:
         plan_preview(args.objective, args.time_value, args.budget_usd,
