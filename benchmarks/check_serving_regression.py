@@ -1,0 +1,108 @@
+"""CI gate: serving-throughput acceptance + regression vs committed baseline.
+
+Usage (what .github/workflows/ci.yml runs after ``serving_bench.py --smoke``):
+
+    python benchmarks/check_serving_regression.py \
+        --current BENCH_serving_smoke.json \
+        --baseline benchmarks/baselines/serving_baseline.json
+
+Raw tokens/s is machine-dependent, so every gated metric is an *in-run
+ratio* — both sides of each division come from the same sweep on the same
+machine, so CPU speed cancels:
+
+1. **Throughput acceptance** — ``summary.speedup_64`` (paged 64-slot tok/s
+   over the seed dense 4-slot batcher on the identical trace) must be
+   ``>= --min-speedup`` (default 3.0, the PR's acceptance bar).
+2. **Prefill-interference bound** — the mixed-arrival run's p99 decode-tick
+   wall must stay within ``--max-p99-ratio`` (default 2.0) of the
+   no-prefill steady-state run's median tick wall: chunked prefill may not
+   wreck tail decode latency.
+3. **Host-sync economy** — the paged 64-slot run must sync the host at most
+   once per ``--min-ticks-per-sync`` decode ticks (drain batching actually
+   engaged; one sync per tick is the dense failure mode).
+4. **Baseline drift** — ``speedup_64`` may not fall below
+   ``--max-drift`` x the committed baseline's value.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_serving_smoke.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/serving_baseline.json")
+    ap.add_argument("--min-speedup", type=float, default=3.0)
+    ap.add_argument("--max-p99-ratio", type=float, default=2.0)
+    ap.add_argument("--min-ticks-per-sync", type=float, default=4.0)
+    ap.add_argument("--max-drift", type=float, default=0.6,
+                    help="current speedup_64 must be >= this fraction of "
+                         "the committed baseline's speedup_64")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures: list[str] = []
+    s = cur["summary"]
+
+    speedup = s["speedup_64"]
+    ok = speedup >= args.min_speedup
+    print(f"paged-vs-dense speedup at 64 slots: {speedup:.2f}x "
+          f"(min {args.min_speedup}x) {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(
+            f"speedup_64 {speedup:.2f}x below acceptance bar "
+            f"{args.min_speedup}x")
+
+    p99r = s["p99_over_steady_p50"]
+    ok = p99r <= args.max_p99_ratio
+    print(f"mixed p99 tick / steady p50 tick:   {p99r:.2f}x "
+          f"(max {args.max_p99_ratio}x) {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(
+            f"prefill interference: p99 tick is {p99r:.2f}x the no-prefill "
+            f"steady-state median (max {args.max_p99_ratio}x)")
+
+    paged = cur["scenarios"]["paged_s64_mixed"]
+    tps = paged["ticks"] / max(paged["host_syncs"], 1)
+    ok = tps >= args.min_ticks_per_sync
+    print(f"decode ticks per host sync (paged): {tps:.1f} "
+          f"(min {args.min_ticks_per_sync}) {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(
+            f"host-sync batching not engaged: {tps:.1f} ticks/sync "
+            f"(min {args.min_ticks_per_sync})")
+
+    b = base["summary"]["speedup_64"]
+    drift = speedup / max(b, 1e-9)
+    ok = drift >= args.max_drift
+    print(f"speedup_64 vs committed baseline:   {drift:.2f}x of {b:.2f}x "
+          f"(min {args.max_drift}x) {'OK' if ok else 'FAIL'}")
+    if not ok:
+        failures.append(
+            f"speedup_64 {speedup:.2f}x is only {drift:.2f}x of the "
+            f"baseline {b:.2f}x (floor {args.max_drift}x)")
+
+    rej = cur["scenarios"]["paged_s64_mixed"].get("rejected", 0)
+    if rej:
+        failures.append(
+            f"paged_s64_mixed rejected {rej} requests — the 64-slot pool "
+            f"must fit the benchmark trace")
+
+    if failures:
+        print("\nSERVING REGRESSION:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("serving gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,6 +9,7 @@ the reverse permute), validated against the sequential reference in tests.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Callable
 
 import jax
@@ -19,6 +20,13 @@ try:
     from jax import shard_map as _shard_map
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
+
+# jax >= 0.6 renamed check_rep -> check_vma; disable either way (the bodies
+# use collectives that the replication checker cannot verify)
+_SM_NOCHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
 
 
 def pipeline_apply(
@@ -77,7 +85,7 @@ def pipeline_apply(
         per_stage, mesh=mesh,
         in_specs=(spec_params, P()),
         out_specs=P(axis),  # each stage returns outs; only last is real
-        check_vma=False,
+        **_SM_NOCHECK,
     )(stage_params, x)
     # out has a stage-sharded leading dim view: (n_stages*n_micro, ...) after
     # concat; the real outputs live in the last stage's block

@@ -145,6 +145,37 @@ def _resolve_scan(r, k, v, log_w, u, s0, *, interpret):
     return tuner.resolve(key, heuristic)
 
 
+def paged_attention(q, kp, vp, posp, table, pos_q, *, causal=True, window=0,
+                    scale=None):
+    """Decode attention over a paged KV pool.
+
+    q: (B, 1, Hq, Dk); kp/vp: (n_pages, page_size, Hkv, D) pools;
+    posp: (n_pages, page_size) absolute positions (-1 = empty);
+    table: (B, max_pages) block table, entries == n_pages = unallocated.
+
+    Gathers each slot's pages into a contiguous (B, max_pages*page_size, ...)
+    view — unallocated pages read as pos == -1 via take's fill mode, so the
+    position mask in ``attention_core`` drops them exactly.  The gather is
+    O(B * max_pages * page_size), i.e. per-slot *capacity*, not pool size:
+    slots only ever pay for the pages their own request reserved.
+    """
+    import jax.numpy as jnp
+
+    from repro.models.attention import attention_core  # lazy: avoid cycle
+
+    B, P = table.shape
+    ps = kp.shape[1]
+    flat = table.reshape(-1)  # (B*P,)
+    k = jnp.take(kp, flat, axis=0, mode="fill", fill_value=0)
+    v = jnp.take(vp, flat, axis=0, mode="fill", fill_value=0)
+    pos_k = jnp.take(posp, flat, axis=0, mode="fill", fill_value=-1)
+    k = k.reshape(B, P * ps, *kp.shape[2:])
+    v = v.reshape(B, P * ps, *vp.shape[2:])
+    pos_k = pos_k.reshape(B, P * ps)
+    return attention_core(q, k, v, pos_q, pos_k, causal=causal,
+                          window=window, scale=scale)
+
+
 # re-exported oracles
 attention_ref = _ref.attention_ref
 wkv_ref = _ref.wkv_ref

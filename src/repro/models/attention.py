@@ -31,12 +31,17 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 @dataclasses.dataclass
 class ModelCtx:
-    mode: str  # train | prefill | decode | encode
+    mode: str  # train | prefill | chunk_prefill | decode | encode
     positions: jax.Array  # (B, S) int32; or (3, B, S) for mrope
     cache_pos: jax.Array | None = None  # (B,) int32 write position (decode)
     enc_out: jax.Array | None = None  # (B, S_enc, d) encoder output
     enc_positions: jax.Array | None = None  # (B, S_enc)
     causal: bool = True
+    #: (B, max_pages) int32 block table for paged KV pools (decode only);
+    #: entries == n_pages mark unallocated logical pages.  Carried on the ctx
+    #: (not in the cache pytree) so scanned segments see it as a closure
+    #: capture instead of a scanned leaf.
+    table: jax.Array | None = None
 
     @property
     def pos2d(self) -> jax.Array:
@@ -297,14 +302,59 @@ def prefill_cache(cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array) -> di
 
 
 def append_cache(cache: dict, k_t: jax.Array, v_t: jax.Array, pos: jax.Array) -> dict:
-    """Append one token (decode). k_t: (B, 1, H, D); pos: (B,)."""
+    """Append one token (decode). k_t: (B, 1, H, D); pos: (B,).
+
+    pos < 0 marks an inactive slot (e.g. mid-chunk-prefill in the paged
+    engine): its write maps to an out-of-bounds index and is dropped, so
+    decoding the shared batch never clobbers a slot being prefilled."""
     size = cache["k"].shape[1]
-    slots = pos % size
+    slots = jnp.where(pos >= 0, pos % size, size)
     b_idx = jnp.arange(k_t.shape[0])
     return {
         "k": cache["k"].at[b_idx, slots].set(k_t[:, 0].astype(cache["k"].dtype)),
         "v": cache["v"].at[b_idx, slots].set(v_t[:, 0].astype(cache["v"].dtype)),
         "pos": cache["pos"].at[b_idx, slots].set(pos),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pools (block-table indirection, shared across decode slots)
+# ---------------------------------------------------------------------------
+
+
+def paged_kv_cache_specs(n_pages: int, page_size: int, n_kv: int, dk: int,
+                         dv: int, dtype) -> dict:
+    """Specs for a page *pool*: no batch dim — physical pages are allocated
+    to slots through a block table (see launch/paged_kv.py).  The ``pages``
+    logical tag is how gather/scatter code finds the pool dim."""
+    ax = ("pages", None, "kv_heads", None)
+    return {
+        "k": (jax.ShapeDtypeStruct((n_pages, page_size, n_kv, dk), dtype), ax),
+        "v": (jax.ShapeDtypeStruct((n_pages, page_size, n_kv, dv), dtype), ax),
+        "pos": (jax.ShapeDtypeStruct((n_pages, page_size), jnp.int32),
+                ("pages", None)),
+    }
+
+
+def paged_append(cache: dict, k_t: jax.Array, v_t: jax.Array, pos: jax.Array,
+                 table: jax.Array) -> dict:
+    """Append one token per slot into the page pool (decode).
+
+    k_t: (B, 1, H, D); pos: (B,) absolute positions; table: (B, P).
+    Slots with pos < 0 (inactive) and unallocated logical pages resolve to an
+    out-of-bounds page index, so their scatter is dropped — a dead slot can
+    never corrupt pages that have been recycled to another request."""
+    n_pages, ps = cache["pos"].shape
+    P = table.shape[1]
+    valid = (pos >= 0) & (pos < P * ps)
+    lpage = jnp.clip(pos // ps, 0, P - 1)
+    page = jnp.take_along_axis(table, lpage[:, None], axis=1)[:, 0]
+    page = jnp.where(valid, page, n_pages)  # OOB scatter index -> dropped
+    off = pos % ps
+    return {
+        "k": cache["k"].at[page, off].set(k_t[:, 0].astype(cache["k"].dtype)),
+        "v": cache["v"].at[page, off].set(v_t[:, 0].astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[page, off].set(pos),
     }
 
 
@@ -335,6 +385,7 @@ def apply_attention(
     *,
     window: int = 0,
     cross: bool = False,
+    paged: bool = False,
 ) -> tuple[jax.Array, dict | None]:
     cdt = cfg.compute_dtype
     B, S, _ = x.shape
@@ -378,16 +429,40 @@ def apply_attention(
         new_cache = None
         if cache is None:  # train / encode: attend within the computed seq
             k_att, v_att, pos_k = k, v, pos_q
+            o = attention_core(q, k_att, v_att, pos_q, pos_k,
+                               causal=ctx.causal, window=window)
+        elif ctx.mode == "decode" and paged:
+            # Page-pool cache: scatter the new token through the block table,
+            # then attend over the slot's gathered pages (kernels/ops).
+            new_cache = paged_append(cache, k, v, ctx.cache_pos, ctx.table)
+            from repro.kernels import ops as kops
+            o = kops.paged_attention(
+                q, new_cache["k"].astype(cdt), new_cache["v"].astype(cdt),
+                new_cache["pos"], ctx.table, pos_q, causal=ctx.causal,
+                window=window)
         elif ctx.mode == "decode":
             new_cache = append_cache(cache, k, v, ctx.cache_pos)
             k_att = constrain(new_cache["k"], *kv_ax).astype(cdt)
             v_att = constrain(new_cache["v"], *kv_ax).astype(cdt)
             pos_k = new_cache["pos"]
+            o = attention_core(q, k_att, v_att, pos_q, pos_k,
+                               causal=ctx.causal, window=window)
+        elif ctx.mode == "chunk_prefill":
+            # Continue a prefix already in the cache: attend over (cache
+            # contents ∪ this chunk), then persist the chunk.  Works for full
+            # caches and SWA rings alike — masks come from explicit positions,
+            # and empty slots carry pos == -1.
+            k_att = jnp.concatenate([cache["k"].astype(cdt), k], axis=1)
+            v_att = jnp.concatenate([cache["v"].astype(cdt), v], axis=1)
+            pos_k = jnp.concatenate([cache["pos"], pos_q], axis=1)
+            new_cache = prefill_cache(cache, k, v, pos_q)
+            o = attention_core(q, k_att, v_att, pos_q, pos_k,
+                               causal=ctx.causal, window=window)
         else:  # prefill: attend over computed seq, persist into cache
             new_cache = prefill_cache(cache, k, v, pos_q)
             k_att, v_att, pos_k = k, v, pos_q
-        o = attention_core(q, k_att, v_att, pos_q, pos_k,
-                           causal=ctx.causal, window=window)
+            o = attention_core(q, k_att, v_att, pos_q, pos_k,
+                               causal=ctx.causal, window=window)
 
     o = constrain(o, "batch", None if heads_tp else "seq_act",
                   "heads" if heads_tp else None, None)

@@ -118,30 +118,52 @@ def apply_mla(
 
     q_nope, q_rope = _queries(p, cfg, x, ctx)
 
-    if ctx.mode == "decode":
+    if ctx.mode in ("decode", "chunk_prefill"):
         assert cache is not None
-        # ---- absorbed decode path (latent-space attention) -----------------
+        # ---- absorbed path (latent-space attention) ------------------------
+        # decode: one new token per slot; chunk_prefill: a chunk of C tokens
+        # continuing a prefix already in the cache.  Both write their latents
+        # into the cache and attend with a (B, Q, S) position mask, so the
+        # multi-query case is the exact generalization of single-token decode.
         ckv_t, kr_t = _latents(p, cfg, x, ctx)
-        b_idx = jnp.arange(B)
-        slots = ctx.cache_pos % cache["ckv"].shape[1]
-        new_cache = {
-            "ckv": cache["ckv"].at[b_idx, slots].set(ckv_t[:, 0].astype(cache["ckv"].dtype)),
-            "kr": cache["kr"].at[b_idx, slots].set(kr_t[:, 0].astype(cache["kr"].dtype)),
-            "pos": cache["pos"].at[b_idx, slots].set(ctx.cache_pos),
-        }
-        ckv = constrain(new_cache["ckv"], "batch", "kv_seq", None).astype(cdt)
-        kr = constrain(new_cache["kr"], "batch", "kv_seq", None).astype(cdt)
-        pos_k = new_cache["pos"]
+        size = cache["ckv"].shape[1]
+        if ctx.mode == "decode":
+            b_idx = jnp.arange(B)
+            # pos < 0 = inactive slot: write lands out of bounds -> dropped
+            slots = jnp.where(ctx.cache_pos >= 0, ctx.cache_pos % size, size)
+            new_cache = {
+                "ckv": cache["ckv"].at[b_idx, slots].set(ckv_t[:, 0].astype(cache["ckv"].dtype)),
+                "kr": cache["kr"].at[b_idx, slots].set(kr_t[:, 0].astype(cache["kr"].dtype)),
+                "pos": cache["pos"].at[b_idx, slots].set(ctx.cache_pos),
+            }
+            ckv = constrain(new_cache["ckv"], "batch", "kv_seq", None).astype(cdt)
+            kr = constrain(new_cache["kr"], "batch", "kv_seq", None).astype(cdt)
+            pos_k = new_cache["pos"]
+            pos_q = ctx.cache_pos[:, None]  # (B, 1)
+        else:
+            pos_q = ctx.pos2d  # (B, C)
+            slots = pos_q % size
+            b_idx = jnp.arange(B)[:, None]
+            new_cache = {
+                "ckv": cache["ckv"].at[b_idx, slots].set(ckv_t.astype(cache["ckv"].dtype)),
+                "kr": cache["kr"].at[b_idx, slots].set(kr_t.astype(cache["kr"].dtype)),
+                "pos": cache["pos"].at[b_idx, slots].set(pos_q),
+            }
+            # attend over (old cache contents ∪ this chunk); empty cache slots
+            # carry pos == -1 and drop out of the mask
+            ckv = jnp.concatenate([cache["ckv"].astype(cdt), ckv_t], axis=1)
+            kr = jnp.concatenate([cache["kr"].astype(cdt), kr_t], axis=1)
+            pos_k = jnp.concatenate([cache["pos"], pos_q], axis=1)
 
-        # absorb W_uk into q: (B,1,H,nope) x (lora,H,nope) -> (B,1,H,lora)
+        # absorb W_uk into q: (B,Q,H,nope) x (lora,H,nope) -> (B,Q,H,lora)
         q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope, p["w_uk"].astype(cdt))
         s = jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv,
                        preferred_element_type=jnp.float32)
         s += jnp.einsum("bqhr,bsr->bhqs", q_rope, kr,
                         preferred_element_type=jnp.float32)
         s *= (nope + rope) ** -0.5
-        mask = (pos_k >= 0) & (pos_k <= ctx.cache_pos[:, None])
-        s = jnp.where(mask[:, None, None, :], s, -0.7 * jnp.finfo(jnp.float32).max)
+        mask = (pos_k[:, None, :] >= 0) & (pos_k[:, None, :] <= pos_q[:, :, None])
+        s = jnp.where(mask[:, None], s, -0.7 * jnp.finfo(jnp.float32).max)
         w = jax.nn.softmax(s, axis=-1)
         o_lat = jnp.einsum("bhqs,bsl->bqhl", w.astype(cdt), ckv)
         o = jnp.einsum("bqhl,lhv->bqhv", o_lat, p["w_uv"].astype(cdt))

@@ -203,15 +203,22 @@ class LanguageModel:
 
     # ------------------------------------------------------------------ serve
     def cache_specs(self, batch: int, max_len: int, enc_len: int = 0,
-                    dtype=jnp.bfloat16) -> dict:
+                    dtype=jnp.bfloat16,
+                    pages: tuple[int, int] | None = None) -> dict:
+        """``pages=(n_pages, page_size)`` swaps full-attention KV caches for
+        shared page pools (no batch dim; see launch/paged_kv.py).  All other
+        cache kinds (SWA rings, cross, MLA latents, recurrent states) remain
+        slot-dense with ``batch`` rows."""
         specs = {}
         for i, seg in enumerate(self.dec_segments):
             specs[f"seg{i}"] = tfm.segment_cache_specs(
-                self.cfg, seg, batch, max_len, enc_len or max_len, dtype)
+                self.cfg, seg, batch, max_len, enc_len or max_len, dtype,
+                pages=pages)
         return specs
 
     def init_cache(self, batch: int, max_len: int, enc_len: int = 0,
-                   dtype=jnp.bfloat16) -> dict:
+                   dtype=jnp.bfloat16,
+                   pages: tuple[int, int] | None = None) -> dict:
         def make(leaf):
             sds, _ = leaf
             if sds.dtype == jnp.int32:  # slot-position arrays start empty
@@ -219,7 +226,8 @@ class LanguageModel:
             return jnp.zeros(sds.shape, sds.dtype)
 
         return jax.tree.map(
-            make, self.cache_specs(batch, max_len, enc_len, dtype),
+            make, self.cache_specs(batch, max_len, enc_len, dtype,
+                                   pages=pages),
             is_leaf=_is_spec_leaf)
 
     def prefill(self, params: dict, batch: dict, cache: dict) -> tuple[jax.Array, dict]:
@@ -239,15 +247,47 @@ class LanguageModel:
         logits = self._head(params, x[:, -1:])[:, 0]
         return logits, new_cache
 
+    def prefill_chunk(self, params: dict, batch: dict, cache: dict,
+                      start: jax.Array) -> tuple[jax.Array, dict]:
+        """Continue prefilling an existing cache with one chunk of tokens.
+
+        batch["tokens"]: (B, C); start: (B,) absolute position of the chunk's
+        first token.  Attends over (cache contents ∪ chunk), so calling this
+        repeatedly over an exact partition of the prompt is equivalent to one
+        full ``prefill`` — no padding, no masking approximations.  Returns the
+        last-position logits (the argmax seed once the prompt is exhausted)
+        and the updated cache.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, C = tokens.shape
+        pos = start[:, None].astype(jnp.int32) + jnp.arange(C, dtype=jnp.int32)
+        if cfg.pos_type == "mrope":
+            pos = jnp.broadcast_to(pos, (3, B, C))
+        ctx = ModelCtx(mode="chunk_prefill", positions=pos)
+        if cfg.enc_dec:
+            enc_out, enc_pos = self._encode(params, batch["frames"])
+            ctx = ModelCtx(mode="chunk_prefill", positions=pos,
+                           enc_out=enc_out, enc_positions=enc_pos)
+        x = self._embed(params, tokens, batch.get("embeds"))
+        if cfg.pos_type == "learned":
+            x = x + jnp.take(params["pos_embed"], pos, axis=0).astype(x.dtype)
+        x, new_cache, _ = self._backbone(params, x, cache, ctx)
+        logits = self._head(params, x[:, -1:])[:, 0]
+        return logits, new_cache
+
     def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
-                    pos: jax.Array) -> tuple[jax.Array, dict]:
-        """tokens: (B, 1); pos: (B,) current positions (0-based)."""
+                    pos: jax.Array,
+                    table: jax.Array | None = None) -> tuple[jax.Array, dict]:
+        """tokens: (B, 1); pos: (B,) current positions (0-based).  ``table``
+        is the (B, max_pages) block table when ``cache`` holds paged pools."""
         cfg = self.cfg
         B = tokens.shape[0]
         positions = pos[:, None].astype(jnp.int32)
         if cfg.pos_type == "mrope":
             positions = jnp.broadcast_to(positions, (3, B, 1))
-        ctx = ModelCtx(mode="decode", positions=positions, cache_pos=pos)
+        ctx = ModelCtx(mode="decode", positions=positions, cache_pos=pos,
+                       table=table)
         x = self._embed(params, tokens)
         if cfg.pos_type == "learned":
             x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(x.dtype)

@@ -19,6 +19,7 @@ through), matching GShard semantics.
 from __future__ import annotations
 
 import functools
+import inspect
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,13 @@ except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from jax.sharding import PartitionSpec as P
+
+# jax >= 0.6 renamed check_rep -> check_vma; disable either way (the dispatch
+# body's psum_scatter/all_gather pattern defeats the replication checker)
+_SM_NOCHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
 
 _SMALL_T = 4096  # global token threshold below which dense path wins
 
@@ -192,7 +200,7 @@ def _moe_shard_map(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, 
             P("model", "data", None),  # w_down
         ),
         out_specs=(P(bs, "model", None), P()),
-        check_vma=False,
+        **_SM_NOCHECK,
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     return out, aux
 

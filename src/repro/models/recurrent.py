@@ -91,7 +91,8 @@ def _rg_gates(p: dict, cfg: ModelConfig, u: jax.Array):
 
 
 def apply_rglru(p: dict, cfg: ModelConfig, x: jax.Array, state: dict | None,
-                mode: str) -> tuple[jax.Array, dict | None]:
+                mode: str,
+                active: jax.Array | None = None) -> tuple[jax.Array, dict | None]:
     cdt = cfg.compute_dtype
     y_gate = jax.nn.gelu(x @ p["w_y"].astype(cdt), approximate=True)
     u_pre = x @ p["w_x"].astype(cdt)
@@ -107,16 +108,29 @@ def apply_rglru(p: dict, cfg: ModelConfig, x: jax.Array, state: dict | None,
         log_a, gated = _rg_gates(p, cfg, u[:, None, :].astype(cdt))
         a = jnp.exp(log_a[:, 0])
         h = a * state["h"] + gated[:, 0]
-        new_state = {
-            "h": h,
-            "conv": jnp.concatenate(
-                [conv_cache[:, 1:], u_pre.astype(jnp.float32)], axis=1),
-        }
+        conv_new = jnp.concatenate(
+            [conv_cache[:, 1:], u_pre.astype(jnp.float32)], axis=1)
+        if active is not None:  # inactive slots keep their state verbatim
+            h = jnp.where(active[:, None], h, state["h"])
+            conv_new = jnp.where(active[:, None, None], conv_new, conv_cache)
+        new_state = {"h": h, "conv": conv_new}
         out = (y_gate * h[:, None, :].astype(cdt)) @ p["w_o"].astype(cdt)
         return constrain(out, "batch", None, "embed_fsdp"), new_state
 
-    u = _causal_conv(u_pre.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
-                     p["conv_b"].astype(jnp.float32)).astype(cdt)
+    u_hist = u_pre.astype(jnp.float32)
+    if mode == "chunk_prefill":
+        assert state is not None
+        # Carry the causal-conv window across chunks: prepend the cached
+        # u-history, convolve, then drop the history rows.  A fresh state is
+        # all-zeros, which matches _causal_conv's implicit zero padding, so
+        # the first chunk is bit-identical to an uncarried prefill.
+        u_hist = jnp.concatenate([state["conv"], u_hist], axis=1)
+        u = _causal_conv(u_hist, p["conv_w"].astype(jnp.float32),
+                         p["conv_b"].astype(jnp.float32))
+        u = u[:, cfg.conv_width - 1:].astype(cdt)
+    else:
+        u = _causal_conv(u_hist, p["conv_w"].astype(jnp.float32),
+                         p["conv_b"].astype(jnp.float32)).astype(cdt)
     log_a, gated = _rg_gates(p, cfg, u)
     a = jnp.exp(log_a)
 
@@ -126,14 +140,14 @@ def apply_rglru(p: dict, cfg: ModelConfig, x: jax.Array, state: dict | None,
         return a1 * a2, b1 * a2 + b2
 
     a_cum, h = jax.lax.associative_scan(binop, (a, gated), axis=1)
-    if state is not None and mode == "prefill_continue":
+    if state is not None and mode in ("prefill_continue", "chunk_prefill"):
         h = h + a_cum * state["h"][:, None, :]
 
     new_state = None
-    if mode == "prefill":
+    if mode in ("prefill", "chunk_prefill"):
         new_state = {
             "h": h[:, -1],
-            "conv": u_pre[:, -(cfg.conv_width - 1):].astype(jnp.float32),
+            "conv": u_hist[:, -(cfg.conv_width - 1):],
         }
     out = (y_gate * h.astype(cdt)) @ p["w_o"].astype(cdt)
     return constrain(out, "batch", None, "embed_fsdp"), new_state
@@ -291,12 +305,17 @@ def _group_norm(y: jax.Array, w: jax.Array, b: jax.Array, n: int,
 
 def apply_rwkv_time_mix(p: dict, cfg: ModelConfig, x: jax.Array,
                         state: dict | None, mode: str,
-                        use_kernel: bool = False):
+                        use_kernel: bool = False,
+                        active: jax.Array | None = None):
     cdt = cfg.compute_dtype
     B, S, d = x.shape
     h, n = d // cfg.rwkv_head_size, cfg.rwkv_head_size
 
-    prev = state["x_tm"] if (state is not None and mode == "decode") else None
+    # chunk_prefill continues a prefix: token 0 shifts against the cached
+    # last-token activation (zeros when fresh, == _shift's zero pad)
+    prev = (state["x_tm"] if (state is not None
+                              and mode in ("decode", "chunk_prefill"))
+            else None)
     xx = _shift(x, prev)
     xw, xk, xv, xr, xg = _ddlerp(p, x, xx)
 
@@ -332,15 +351,21 @@ def apply_rwkv_time_mix(p: dict, cfg: ModelConfig, x: jax.Array,
 
     new_state = None
     if state is not None:
-        new_state = {"S": s_fin, "x_tm": x[:, -1].astype(jnp.float32),
-                     "x_cm": state["x_cm"]}
+        x_tm = x[:, -1].astype(jnp.float32)
+        if active is not None:  # inactive slots keep their state verbatim
+            s_fin = jnp.where(active[:, None, None, None], s_fin, state["S"])
+            x_tm = jnp.where(active[:, None], x_tm, state["x_tm"])
+        new_state = {"S": s_fin, "x_tm": x_tm, "x_cm": state["x_cm"]}
     return out, new_state
 
 
 def apply_rwkv_channel_mix(p: dict, cfg: ModelConfig, x: jax.Array,
-                           state: dict | None, mode: str):
+                           state: dict | None, mode: str,
+                           active: jax.Array | None = None):
     cdt = cfg.compute_dtype
-    prev = state["x_cm"] if (state is not None and mode == "decode") else None
+    prev = (state["x_cm"] if (state is not None
+                              and mode in ("decode", "chunk_prefill"))
+            else None)
     xx = _shift(x, prev)
     dx = xx - x
     xk = x + dx * p["mu_k"].astype(cdt)
@@ -349,5 +374,8 @@ def apply_rwkv_channel_mix(p: dict, cfg: ModelConfig, x: jax.Array,
     out = jax.nn.sigmoid(xr @ p["w_r"].astype(cdt)) * (kk @ p["w_v"].astype(cdt))
     new_state = None
     if state is not None:
-        new_state = {**state, "x_cm": x[:, -1].astype(jnp.float32)}
+        x_cm = x[:, -1].astype(jnp.float32)
+        if active is not None:
+            x_cm = jnp.where(active[:, None], x_cm, state["x_cm"])
+        new_state = {**state, "x_cm": x_cm}
     return constrain(out, "batch", "seq_act", None), new_state

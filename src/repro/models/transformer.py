@@ -109,7 +109,12 @@ def init_layer(key: jax.Array, cfg: ModelConfig, kind: LayerKind) -> dict:
 
 
 def cache_specs_for_kind(cfg: ModelConfig, kind: LayerKind, batch: int,
-                         max_len: int, enc_len: int, dtype) -> Any:
+                         max_len: int, enc_len: int, dtype,
+                         pages: tuple[int, int] | None = None) -> Any:
+    """``pages=(n_pages, page_size)`` swaps full-attention KV caches for
+    shared page pools (block-table indirection; see launch/paged_kv.py).
+    SWA rings, cross caches, MLA latents and recurrent states stay slot-dense
+    — they are O(window)/O(1) per slot, so paging buys nothing there."""
     t, _ = kind
     if t == "swa":
         size = min(cfg.window, max_len) if cfg.window else max_len
@@ -118,6 +123,10 @@ def cache_specs_for_kind(cfg: ModelConfig, kind: LayerKind, batch: int,
     if t == "attn":
         if cfg.use_mla:
             return mla_mod.mla_cache_specs(batch, max_len, cfg, dtype)
+        if pages is not None:
+            return attn_mod.paged_kv_cache_specs(
+                pages[0], pages[1], cfg.n_kv_heads, cfg.head_dim,
+                cfg.head_dim, dtype)
         return attn_mod.kv_cache_specs(batch, max_len, cfg.n_kv_heads,
                                        cfg.head_dim, cfg.head_dim, dtype)
     if t == "xattn":
@@ -134,6 +143,15 @@ def cache_specs_for_kind(cfg: ModelConfig, kind: LayerKind, batch: int,
     raise ValueError(t)
 
 
+def _active_mask(ctx: ModelCtx) -> jax.Array | None:
+    """Per-slot liveness for decode: pos < 0 marks a slot whose recurrent
+    state must pass through unchanged (it is being chunk-prefilled while the
+    rest of the batch decodes)."""
+    if ctx.mode == "decode" and ctx.cache_pos is not None:
+        return ctx.cache_pos >= 0
+    return None
+
+
 def apply_layer(p: dict, cfg: ModelConfig, kind: LayerKind, x: jax.Array,
                 cache: Any, ctx: ModelCtx) -> tuple[jax.Array, Any, jax.Array]:
     t, is_moe = kind
@@ -145,8 +163,14 @@ def apply_layer(p: dict, cfg: ModelConfig, kind: LayerKind, x: jax.Array,
         if cfg.use_mla:
             y, new_cache = mla_mod.apply_mla(p["core"], cfg, h, ctx, cache)
         else:
+            # Only full-attention layers page; the flag (not cache structure
+            # sniffing) decides, because inside a scanned segment the cache is
+            # a tracer whose paged-ness can't be inspected.
+            paged = (ctx.table is not None and t == "attn"
+                     and ctx.mode == "decode")
             y, new_cache = attn_mod.apply_attention(p["core"], cfg, h, ctx,
-                                                    cache, window=window)
+                                                    cache, window=window,
+                                                    paged=paged)
     elif t == "xattn":
         y, self_c = attn_mod.apply_attention(
             p["core"], cfg, h, ctx, None if cache is None else cache["self"])
@@ -157,18 +181,20 @@ def apply_layer(p: dict, cfg: ModelConfig, kind: LayerKind, x: jax.Array,
             None if cache is None else cache["cross"], cross=True)
         new_cache = None if cache is None else {"self": self_c, "cross": cross_c}
     elif t == "rglru":
-        y, new_cache = rec_mod.apply_rglru(p["core"], cfg, h, cache, ctx.mode)
+        y, new_cache = rec_mod.apply_rglru(p["core"], cfg, h, cache, ctx.mode,
+                                           active=_active_mask(ctx))
     elif t == "rwkv6":
-        y, new_cache = rec_mod.apply_rwkv_time_mix(p["core"], cfg, h, cache,
-                                                   ctx.mode)
+        y, new_cache = rec_mod.apply_rwkv_time_mix(
+            p["core"], cfg, h, cache, ctx.mode, active=_active_mask(ctx))
     else:
         raise ValueError(t)
     x = x + y
 
     h = apply_norm(p["norm2"], cfg, x)
     if t == "rwkv6":
-        y, new_cache = rec_mod.apply_rwkv_channel_mix(p["mlp"], cfg, h,
-                                                      new_cache, ctx.mode)
+        y, new_cache = rec_mod.apply_rwkv_channel_mix(
+            p["mlp"], cfg, h, new_cache, ctx.mode,
+            active=_active_mask(ctx))
     elif is_moe:
         y, aux = moe_mod.apply_moe(p["moe"], cfg, h)
         if cfg.n_shared_experts:
@@ -226,9 +252,11 @@ def init_segment(key: jax.Array, cfg: ModelConfig, seg: Segment,
 
 
 def segment_cache_specs(cfg: ModelConfig, seg: Segment, batch: int,
-                        max_len: int, enc_len: int, dtype) -> Any:
+                        max_len: int, enc_len: int, dtype,
+                        pages: tuple[int, int] | None = None) -> Any:
     per_block = {
-        f"sub{i}": cache_specs_for_kind(cfg, kind, batch, max_len, enc_len, dtype)
+        f"sub{i}": cache_specs_for_kind(cfg, kind, batch, max_len, enc_len,
+                                        dtype, pages=pages)
         for i, kind in enumerate(seg.kinds)
     }
     if not seg.scanned:

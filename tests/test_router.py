@@ -1,0 +1,144 @@
+"""Cost-model-routed replica front-end: SLO traffic buys premium capacity
+only when the deadline demands it, bulk traffic always takes the cheapest
+replica, and per-replica circuit breakers reroute around hard failures."""
+from repro.core.adaptive import OnlineCostModel
+from repro.core.costmodel import CostModel
+from repro.launch.router import (ReplicaRouter, ServeClass, default_replicas)
+
+BULK = ServeClass("bulk", deadline_s=None)
+
+
+def _router(**kw):
+    return ReplicaRouter(default_replicas(), **kw)
+
+
+def _wall(router, work, cls, name):
+    r = router.replicas[name]
+    est = router.price(work, cls, r)
+    return router.model.schedule_duration(est, r.platform, cls.name)
+
+
+def test_bulk_routes_to_cheapest_spot():
+    router = _router()
+    d = router.route(0, work_tokens=50_000, cls=BULK)
+    assert d is not None
+    assert router.replicas[d.replica].platform.kind == "spot"
+    # spot is cheaper than premium even after its worse retry multiplier
+    prem = router.price(50_000, BULK, router.replicas["premium-0"])
+    prem_usd = router.model.expected_cost_with_retries(
+        prem, router.replicas["premium-0"].platform, BULK.name)
+    assert d.expected_usd < prem_usd
+
+
+def test_tight_deadline_buys_premium():
+    router = _router()
+    work = 200_000
+    spot_wall = _wall(router, work, BULK, "spot-0")
+    prem_wall = _wall(router, work, BULK, "premium-0")
+    assert prem_wall < spot_wall  # perf_factor 1.2x + better retry odds
+    cls = ServeClass("interactive", deadline_s=(prem_wall + spot_wall) / 2)
+    d = router.route(0, work, cls)
+    assert d.replica == "premium-0"
+    assert d.deadline_feasible
+    assert router.counters["slo_to_premium"] == 1
+
+
+def test_loose_deadline_stays_on_cheap_capacity():
+    router = _router()
+    work = 200_000
+    cls = ServeClass("batchy", deadline_s=10 * _wall(router, work, BULK,
+                                                     "spot-0"))
+    d = router.route(0, work, cls)
+    assert router.replicas[d.replica].platform.kind == "spot"
+    assert d.deadline_feasible
+
+
+def test_infeasible_deadline_degrades_to_fastest():
+    router = _router()
+    cls = ServeClass("impossible", deadline_s=1e-6)
+    d = router.route(0, 200_000, cls)
+    assert d is not None and not d.deadline_feasible
+    assert d.replica == "premium-0"  # fastest wall, even though infeasible
+    assert router.counters["slo_infeasible"] == 1
+
+
+def test_breaker_reroutes_then_unroutable():
+    # static CostModel: failures must not reprice spot above premium, so the
+    # breaker (not the cost feedback) is what forces the reroute
+    router = _router(model=CostModel(), breaker_failures=2,
+                     breaker_cooldown_s=60.0)
+    # hard-fail both spot replicas until their breakers open
+    rid = 0
+    for name in ("spot-0", "spot-1"):
+        trips = 0
+        while router.breakers[name].state != "open":
+            d = router.route(rid, 1000, BULK, now=0.0)
+            assert d is not None and d.replica == name
+            router.complete(rid, "failure", realized_s=1.0, now=0.0)
+            rid += 1
+            trips += 1
+            assert trips < 20  # must converge
+    # bulk now lands on premium despite the price
+    d = router.route(rid, 1000, BULK, now=1.0)
+    assert d.replica == "premium-0"
+    assert router.counters["breaker_denials"] > 0
+    router.complete(rid, "failure", realized_s=1.0, now=1.0)
+    rid += 1
+    d = router.route(rid, 1000, BULK, now=1.0)
+    router.complete(rid, "failure", realized_s=1.0, now=1.0)
+    assert router.breakers["premium-0"].state == "open"
+    # every breaker open inside the cooldown window -> unroutable
+    assert router.route(99, 1000, BULK, now=2.0) is None
+    assert router.counters["unroutable"] == 1
+    # after the cooldown a single half-open probe is admitted again
+    d = router.route(100, 1000, BULK, now=120.0)
+    assert d is not None
+    router.complete(100, "success", realized_s=1.0, now=120.0)
+    assert router.breakers[d.replica].state == "closed"
+
+
+def test_preemption_does_not_trip_breaker():
+    router = _router(breaker_failures=2)
+    for rid in range(6):
+        d = router.route(rid, 1000, BULK, now=0.0)
+        router.complete(rid, "preemption", realized_s=1.0, now=0.0)
+    assert all(b.state == "closed" for b in router.breakers.values())
+
+
+def test_observed_slowness_recalibrates_pricing():
+    router = _router()
+    assert isinstance(router.model, OnlineCostModel)
+    cls = ServeClass("hot", deadline_s=None)
+    base = router.price(10_000, cls, router.replicas["spot-0"]).compute_s
+    for rid in range(12):  # replica consistently 3x slower than the catalog
+        d = router.route(rid, 10_000, cls, now=0.0)
+        router.complete(rid, "success",
+                        realized_s=3.0 * d.estimate.compute_s, now=0.0)
+    recal = router.price(10_000, cls, router.replicas["spot-0"]).compute_s
+    assert recal > 1.5 * base  # EWMA pulled the duration ratio up
+
+
+def test_backlog_tracks_inflight_and_drains():
+    router = _router()
+    d0 = router.route(0, 30_000, BULK)
+    busy = router.replicas[d0.replica]
+    assert busy.backlog_tokens > 0
+    # a queued replica prices higher wall than an idle twin
+    others = [r for r in router.replicas.values()
+              if r.platform.kind == "spot" and r.name != busy.name]
+    est_busy = router.price(1000, BULK, busy)
+    est_idle = router.price(1000, BULK, others[0])
+    assert est_busy.duration_s > est_idle.duration_s
+    router.complete(0, "success", realized_s=est_busy.compute_s)
+    assert busy.backlog_tokens == 0.0
+
+
+def test_stats_shape():
+    router = _router()
+    router.route(0, 1000, BULK)
+    router.complete(0, "success", realized_s=1.0)
+    s = router.stats()
+    assert s["routed"] == 1 and s["bulk_total"] == 1
+    for name, rs in s["replicas"].items():
+        assert set(rs) == {"platform", "backlog_tokens", "breaker", "trips"}
+        assert rs["breaker"] in ("closed", "open", "half-open")
